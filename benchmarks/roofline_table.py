@@ -1,0 +1,75 @@
+"""Aggregate the dry-run JSONs into the §Roofline table (markdown + CSV)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+COLS = ("arch", "shape", "step", "compute_s", "memory_s", "collective_s",
+        "dominant", "compute_fraction", "model_flops_ratio",
+        "per_device_gib", "fits_16gib")
+
+
+def load(mesh_tag: str = "pod1", base: str = "experiments/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(base, mesh_tag, "*.json"))):
+        r = json.load(open(path))
+        if r.get("skipped"):
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "step": "SKIP", "reason": r["reason"]})
+            continue
+        if not r.get("ok", True):
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "step": "FAIL", "reason": r.get("error", "")[:80]})
+            continue
+        rf = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "step": r["step"],
+            "compute_s": rf["compute_s"], "memory_s": rf["memory_s"],
+            "collective_s": rf["collective_s"], "dominant": rf["dominant"],
+            "compute_fraction": rf["compute_fraction"],
+            "model_flops_ratio": rf["model_flops_ratio"],
+            "per_device_gib": r["memory"]["per_device_gib"],
+            "fits_16gib": r["memory"]["fits_16gib"],
+        })
+    return rows
+
+
+def markdown(rows) -> str:
+    out = ["| arch | shape | step | compute_s | memory_s | coll_s | dominant "
+           "| frac | 6ND/HLO | GiB/dev | fits |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["step"] in ("SKIP", "FAIL"):
+            out.append(f"| {r['arch']} | {r['shape']} | {r['step']} | "
+                       f"{r.get('reason', '')} |" + " |" * 7)
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['step']} "
+            f"| {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+            f"| {r['collective_s']:.4f} | {r['dominant']} "
+            f"| {r['compute_fraction']:.3f} | {r['model_flops_ratio']:.2f} "
+            f"| {r['per_device_gib']} | {'Y' if r['fits_16gib'] else 'N'} |")
+    return "\n".join(out)
+
+
+def main():
+    for tag in ("pod1", "pod2"):
+        rows = load(tag)
+        if not rows:
+            continue
+        print(f"\n===== roofline table ({tag}) =====")
+        print(markdown(rows))
+    rows = load("pod1")
+    print("\nname,us_per_call,derived")
+    for r in rows:
+        if r["step"] in ("SKIP", "FAIL"):
+            continue
+        print(f"roofline/{r['arch']}/{r['shape']},"
+              f"{r['compute_s'] * 1e6:.0f},"
+              f"dom={r['dominant']};frac={r['compute_fraction']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Benchmark harness: one module per paper table/figure. Prints a combined
+``name,us_per_call,derived`` CSV at the end.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only table2,fig4]
+"""
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer FL rounds (CI-speed)")
+    ap.add_argument("--only", default="",
+                    help="comma list: table2,table3,table4,fig4,fig6,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    rounds = 16 if args.fast else 40
+
+    from benchmarks import (fig4_overlap, fig6_breakdown, roofline_table,
+                            table2_accuracy, table3_comm_time, table4_gamma)
+
+    csv = ["name,us_per_call,derived"]
+
+    def want(name):
+        return only is None or name in only
+
+    if want("table2"):
+        print("== Table 2: accuracy grid ==")
+        for r in table2_accuracy.run(rounds=rounds):
+            csv.append(f"table2/{r['strategy']}/b{r['beta']}/cr{r['cr']},"
+                       f"{r['wall_s'] * 1e6:.0f},acc={r['final_acc']:.4f}")
+    if want("table3"):
+        print("== Table 3: time-to-accuracy ==")
+        for r in table3_comm_time.run(rounds=rounds):
+            t = r["time_to_target"]
+            csv.append(f"table3/{r['name']},{(t or 0) * 1e6:.0f},"
+                       f"acc={r['final_acc']:.4f};actual={r['actual']:.1f}")
+    if want("table4"):
+        print("== Table 4: gamma sweep ==")
+        for r in table4_gamma.run(rounds=rounds):
+            csv.append(f"table4/gamma{r['gamma']},0,acc={r['final_acc']:.4f}")
+    if want("fig4"):
+        print("== Fig 4: overlap histogram ==")
+        for r in fig4_overlap.run():
+            csv.append(f"fig4/cr{r['cr']},0,"
+                       f"frac_overlap1={r['frac_overlap1']:.4f}")
+    if want("fig6"):
+        print("== Fig 6: round breakdown ==")
+        rows = fig6_breakdown.run()
+        for k, v in rows.items():
+            csv.append(f"fig6/{k},{v * 1e6:.1f},")
+    if want("roofline"):
+        print("== Roofline table (from dry-run artifacts) ==")
+        for tag in ("pod1", "pod2"):
+            rows = roofline_table.load(tag)
+            if rows:
+                print(f"\n--- {tag} ---")
+                print(roofline_table.markdown(rows))
+                for r in rows:
+                    if r["step"] in ("SKIP", "FAIL"):
+                        continue
+                    csv.append(
+                        f"roofline/{tag}/{r['arch']}/{r['shape']},"
+                        f"{r['compute_s'] * 1e6:.0f},"
+                        f"dom={r['dominant']};frac={r['compute_fraction']:.3f}")
+
+    print()
+    print("\n".join(csv))
+
+
+if __name__ == "__main__":
+    main()

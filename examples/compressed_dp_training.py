@@ -1,0 +1,71 @@
+"""Beyond-paper example: hierarchical BCRS/OPWA gradient compression for
+multi-pod data-parallel training (DESIGN.md §2) — trains a reduced LM with
+dense vs compressed pod sync and compares losses + exchanged bytes.
+
+    PYTHONPATH=src python examples/compressed_dp_training.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.bcrs import pod_link_schedule
+from repro.core.compression import k_for_ratio
+from repro.data import synthetic_lm_tokens
+from repro.dist.grad_sync import make_compressed_train_step, make_train_step
+from repro.models import Model
+from repro.optim import make_optimizer
+
+ARCH = "stablelm-1.6b"
+N_PODS, STEPS, BATCH, SEQ = 4, 20, 8, 128
+
+cfg = get_config(ARCH).reduced()
+model = Model(cfg)
+rng = np.random.default_rng(0)
+opt = make_optimizer("sgd", 5e-2)
+
+
+def data(step):
+    toks = synthetic_lm_tokens(BATCH, SEQ + 1, cfg.vocab_size,
+                               np.random.default_rng(1000 + step))
+    return {"tokens": jnp.asarray(toks[:, :-1]),
+            "labels": jnp.asarray(toks[:, 1:])}
+
+
+params0 = model.init(jax.random.PRNGKey(0))
+n_flat = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params0))
+
+# --- dense baseline
+dense_step = jax.jit(make_train_step(model, opt))
+p, s = params0, opt.init(params0)
+for i in range(STEPS):
+    p, s, m = dense_step(p, s, data(i))
+loss_dense = float(m["loss"])
+
+# --- compressed pod sync: pods with heterogeneous DCN links, BCRS CRs
+wire_cr = 0.05
+crs = pod_link_schedule([200.0, 100.0, 50.0, 25.0], v_bytes=4.0 * n_flat,
+                        cr_star=0.01, cr_max=wire_cr)
+print(f"BCRS pod CRs (200/100/50/25 GB/s links): {np.round(crs, 4)}")
+comp_step = jax.jit(make_compressed_train_step(
+    model, opt, n_pods=N_PODS, wire_cr=wire_cr, gamma=2.0,
+    min_leaf_size=4096))
+pod_crs = jnp.asarray(crs, jnp.float32)
+pod_coeffs = jnp.full((N_PODS,), 1.0 / N_PODS, jnp.float32)
+p, s = params0, opt.init(params0)
+for i in range(STEPS):
+    p, s, m = comp_step(p, s, data(i), pod_crs, pod_coeffs)
+loss_comp = float(m["loss"])
+
+# --- exchanged bytes per step (inter-pod)
+dense_bytes = 4.0 * n_flat * 2 * (N_PODS - 1) / N_PODS          # ring AR
+k_total = sum(k_for_ratio(int(np.prod(l.shape)), wire_cr)
+              for l in jax.tree.leaves(params0)
+              if int(np.prod(l.shape)) >= 4096)
+comp_bytes = 8.0 * k_total * (N_PODS - 1) / N_PODS              # idx+val AG
+
+print(f"\nfinal loss: dense={loss_dense:.4f} compressed={loss_comp:.4f}")
+print(f"inter-pod bytes/step/device: dense={dense_bytes / 1e6:.2f}MB "
+      f"compressed={comp_bytes / 1e6:.2f}MB "
+      f"({dense_bytes / comp_bytes:.0f}x reduction)")
+assert np.isfinite(loss_comp)

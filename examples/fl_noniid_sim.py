@@ -1,0 +1,44 @@
+"""End-to-end FL driver (paper §5 protocol): Dirichlet non-IID partitions,
+simulated heterogeneous links, a few hundred aggregate local steps, all five
+aggregation strategies compared on accuracy AND accumulated comm time.
+
+    PYTHONPATH=src python examples/fl_noniid_sim.py [--rounds 40]
+"""
+import argparse
+
+from repro.core.aggregation import AggregationConfig
+from repro.fed.simulation import FLSimConfig, run_fl
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=40)
+    ap.add_argument("--beta", type=float, default=0.1)
+    ap.add_argument("--cr", type=float, default=0.01)
+    args = ap.parse_args()
+
+    print(f"FL sim: 10 clients, beta={args.beta} (severe non-IID), "
+          f"CR={args.cr}, {args.rounds} rounds\n")
+    results = {}
+    for strat in ["fedavg", "topk", "eftopk", "bcrs", "bcrs_opwa"]:
+        acfg = AggregationConfig(strategy=strat, cr=args.cr, alpha=1.0,
+                                 gamma=5.0)
+        sim = FLSimConfig(rounds=args.rounds, beta=args.beta, eval_every=4)
+        res = run_fl(sim, acfg)
+        results[strat] = res
+        print(f"{strat:10s} final_acc={res.final_accuracy:.4f} "
+              f"comm_actual={res.times.actual:8.1f}s "
+              f"comm_max={res.times.max:8.1f}s")
+
+    base = results["topk"].final_accuracy
+    ours = results["bcrs_opwa"].final_accuracy
+    print(f"\nBCRS+OPWA vs TopK at CR={args.cr}: "
+          f"{ours:.4f} vs {base:.4f} ({ours - base:+.4f})")
+    t_topk = results["topk"].times.actual
+    t_bcrs = results["bcrs"].times.actual
+    print(f"comm time BCRS vs TopK: {t_bcrs:.1f}s vs {t_topk:.1f}s "
+          f"(equal by construction; accuracy gain is free)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Quickstart: the paper's technique in 60 lines.
+
+1. compress per-client updates with bandwidth-scheduled Top-K (BCRS)
+2. aggregate with the overlap-aware parameter mask (OPWA)
+3. compare against plain FedAvg on the same updates
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (ClientLink, make_schedule, opwa_aggregate,
+                        overlap_counts, topk_compress_dynamic)
+
+N_CLIENTS, N_PARAMS = 5, 20_000
+rng = np.random.default_rng(0)
+
+# --- per-client model updates (stand-in for local SGD deltas)
+updates = jnp.asarray(rng.normal(0, 1, (N_CLIENTS, N_PARAMS)), jnp.float32)
+data_fracs = np.array([0.4, 0.3, 0.15, 0.1, 0.05])
+
+# --- heterogeneous uplinks: 0.5 .. 2.5 Mbit/s
+links = [ClientLink(bandwidth_bps=(0.5 + i * 0.5) * 1e6, latency_s=0.1)
+         for i in range(N_CLIENTS)]
+
+# --- BCRS: schedule per-client compression ratios + averaging coefficients
+sched = make_schedule(links, data_fracs, v_bytes=4.0 * N_PARAMS,
+                      cr_star=0.01, alpha=1.0)
+print("scheduled CRs:       ", np.round(sched.crs, 4))
+print("client coefficients: ", np.round(sched.coefficients, 4))
+print(f"equalized round time: {sched.t_bench:.2f}s "
+      "(every client finishes together — no stragglers)")
+
+# --- compress with per-client ratios (traced-k bisection Top-K)
+ks = jnp.asarray(np.maximum((sched.crs * N_PARAMS).astype(int), 1))
+comp = jax.vmap(topk_compress_dynamic)(updates, ks)
+
+counts = overlap_counts(comp.mask)
+print(f"\nretained-parameter overlap: "
+      f"{[int((counts == c).sum()) for c in range(N_CLIENTS + 1)]} "
+      f"(count of params retained by 0..{N_CLIENTS} clients)")
+
+# --- OPWA aggregation vs plain weighted average of the sparse updates.
+# Paper Fig. 3: a parameter retained by only ONE client gets scaled by that
+# client's coefficient (~1/K) under uniform averaging — its update signal is
+# diminished. OPWA's gamma mask restores the magnitude the contributing
+# client intended.
+coeffs = jnp.asarray(sched.coefficients, jnp.float32)
+agg_opwa = opwa_aggregate(comp.values, comp.mask, coeffs, gamma=5.0, d=1)
+agg_plain = jnp.einsum("k,kn->n", coeffs, comp.values)
+
+singleton = counts == 1
+intended = jnp.sum(comp.values, axis=0)          # the one contributor's value
+ratio_plain = float(jnp.linalg.norm(agg_plain[singleton])
+                    / jnp.linalg.norm(intended[singleton]))
+ratio_opwa = float(jnp.linalg.norm(agg_opwa[singleton])
+                   / jnp.linalg.norm(intended[singleton]))
+print(f"\nsignal retained on overlap-1 params (1.0 = what the contributing "
+      f"client sent):\n  uniform averaging: {ratio_plain:.2f}   "
+      f"OPWA (gamma=5): {ratio_opwa:.2f}")

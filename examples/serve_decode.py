@@ -1,0 +1,14 @@
+"""Serving example: batched generation with per-family KV/state caches —
+one full-attention arch, the SSM (O(1)-state) arch, and the hybrid.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import subprocess
+import sys
+
+for arch in ["stablelm-1.6b", "rwkv6-1.6b", "hymba-1.5b"]:
+    print(f"\n=== {arch} ===")
+    subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", arch,
+         "--reduced", "--batch", "2", "--prompt-len", "8", "--gen", "16"],
+        check=True)

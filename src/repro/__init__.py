@@ -1,0 +1,4 @@
+"""repro: bandwidth-aware + overlap-weighted compressed distributed training
+framework (BCRS + OPWA, ICPP 2024) on JAX for multi-pod TPU."""
+
+__version__ = "1.0.0"

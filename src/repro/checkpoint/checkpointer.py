@@ -1,0 +1,120 @@
+"""Atomic, restartable checkpointing for pytrees of jax/np arrays.
+
+Format: one msgpack file per step holding {path -> (dtype, shape, raw bytes)}
+plus metadata and a CRC32 integrity digest. Writes go to a temp file and are
+``os.replace``d into place (atomic on POSIX), so a crash mid-write never
+corrupts the latest checkpoint. Retention keeps the newest K steps.
+
+bf16 arrays round-trip via ml_dtypes (a jax dependency).
+"""
+from __future__ import annotations
+
+import os
+import re
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+try:  # bf16 numpy dtype
+    import ml_dtypes
+    _BF16 = np.dtype(ml_dtypes.bfloat16)
+except Exception:  # pragma: no cover
+    _BF16 = None
+
+_CKPT_RE = re.compile(r"^step_(\d+)\.msgpack$")
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _dtype_str(a: np.ndarray) -> str:
+    return "bfloat16" if _BF16 is not None and a.dtype == _BF16 else a.dtype.str
+
+
+def _np_dtype(s: str):
+    return _BF16 if s == "bfloat16" else np.dtype(s)
+
+
+def save(ckpt_dir: str, step: int, tree, extra: Optional[dict] = None,
+         keep: int = 3) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(tree)
+    payload: Dict[str, Any] = {"step": step, "extra": extra or {}, "leaves": {}}
+    crc = 0
+    for key in sorted(flat):
+        a = np.ascontiguousarray(flat[key])
+        raw = a.tobytes()
+        crc = zlib.crc32(raw, crc)
+        payload["leaves"][key] = {"dtype": _dtype_str(a),
+                                  "shape": list(a.shape), "data": raw}
+    payload["crc32"] = crc
+    final = os.path.join(ckpt_dir, f"step_{step}.msgpack")
+    tmp = final + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, final)
+    _apply_retention(ckpt_dir, keep)
+    return final
+
+
+def _apply_retention(ckpt_dir: str, keep: int) -> None:
+    steps = list_steps(ckpt_dir)
+    for s in steps[:-keep]:
+        try:
+            os.remove(os.path.join(ckpt_dir, f"step_{s}.msgpack"))
+        except OSError:
+            pass
+
+
+def list_steps(ckpt_dir: str) -> List[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        m = _CKPT_RE.match(name)
+        if m:
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = list_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, like, step: Optional[int] = None
+            ) -> Tuple[Any, int, dict]:
+    """Restore into the structure of ``like``. Returns (tree, step, extra).
+    Verifies the CRC32 digest; raises on corruption."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step}.msgpack")
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    crc = 0
+    for key in sorted(payload["leaves"]):
+        crc = zlib.crc32(payload["leaves"][key]["data"], crc)
+    if crc != payload["crc32"]:
+        raise IOError(f"checkpoint {path} failed CRC32 integrity check")
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for p, leaf in leaves_p:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
+        rec = payload["leaves"][key]
+        a = np.frombuffer(rec["data"], dtype=_np_dtype(rec["dtype"]))
+        out.append(jnp.asarray(a.reshape(rec["shape"])))
+    return (jax.tree_util.tree_unflatten(treedef, out), payload["step"],
+            payload["extra"])

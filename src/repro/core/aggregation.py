@@ -1,0 +1,107 @@
+"""Server aggregation strategies (paper Alg. 1).
+
+Strategies consume per-client *flat* updates Δw_i = w_t − w_i (K × n), apply
+the chosen compression client-side, and produce the aggregated update the
+server subtracts:  w_{t+1} = w_t − η · agg.
+
+  fedavg      uniform data-weighted average, no compression
+  topk        data-weighted average of Top-K-compressed updates
+  eftopk      topk + client-side error feedback residuals
+  bcrs        per-client CRs from bandwidth schedule + Eq. 6 coefficients
+  bcrs_opwa   bcrs + overlap-aware parameter mask (Alg. 3)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bcrs as bcrs_mod
+from repro.core import compression as comp
+from repro.core import opwa as opwa_mod
+
+
+@dataclass
+class AggregationConfig:
+    strategy: str = "fedavg"       # fedavg | topk | eftopk | bcrs | bcrs_opwa
+    cr: float = 0.1                # default/uniform compression ratio CR*
+    alpha: float = 1.0             # server lr inside coefficients (Eq. 6)
+    gamma: float = 5.0             # OPWA enlarge rate
+    overlap_d: int = 1             # OPWA required degree of overlap
+    block_topk: bool = False       # use TPU block top-k instead of exact
+    block_size: int = 8192
+    use_kernel: bool = False       # route through the Pallas kernels
+
+
+def _compress_fn(acfg: AggregationConfig):
+    if acfg.block_topk:
+        return lambda u, cr: comp.block_topk_compress(
+            u, cr, block=acfg.block_size, use_kernel=acfg.use_kernel)
+    return comp.topk_compress
+
+
+def compress_clients(updates: jax.Array, crs: np.ndarray,
+                     acfg: AggregationConfig,
+                     residuals: Optional[jax.Array] = None
+                     ) -> Tuple[jax.Array, jax.Array, Optional[jax.Array]]:
+    """updates [K, n] -> (values [K, n], masks [K, n], new_residuals)."""
+    fn = _compress_fn(acfg)
+    vals, masks, new_res = [], [], []
+    for i in range(updates.shape[0]):
+        u = updates[i]
+        if residuals is not None:
+            c, r = comp.ef_compress(residuals[i], u, float(crs[i]),
+                                    compress=lambda x, cr: fn(x, cr))
+            new_res.append(r)
+        else:
+            c = fn(u, float(crs[i]))
+        vals.append(c.values)
+        masks.append(c.mask)
+    return (jnp.stack(vals), jnp.stack(masks),
+            jnp.stack(new_res) if residuals is not None else None)
+
+
+def aggregate(updates: jax.Array, data_fracs: np.ndarray,
+              acfg: AggregationConfig,
+              links=None, v_bytes: float = 0.0,
+              residuals: Optional[jax.Array] = None
+              ) -> Tuple[jax.Array, dict, Optional[jax.Array]]:
+    """Run one server aggregation. Returns (agg [n], info, new_residuals)."""
+    k, n = updates.shape
+    f = jnp.asarray(data_fracs, jnp.float32)
+    info: dict = {"strategy": acfg.strategy}
+
+    if acfg.strategy == "fedavg":
+        agg = jnp.einsum("k,kn->n", f, updates.astype(jnp.float32))
+        return agg, info, None
+
+    if acfg.strategy in ("topk", "eftopk"):
+        crs = np.full((k,), acfg.cr)
+        res = residuals if acfg.strategy == "eftopk" else None
+        vals, masks, new_res = compress_clients(updates, crs, acfg, res)
+        agg = jnp.einsum("k,kn->n", f, vals.astype(jnp.float32))
+        info["crs"] = crs
+        return agg, info, new_res
+
+    if acfg.strategy in ("bcrs", "bcrs_opwa"):
+        assert links is not None and v_bytes > 0, "BCRS needs link models"
+        sched = bcrs_mod.make_schedule(links, np.asarray(data_fracs),
+                                       v_bytes, acfg.cr, acfg.alpha)
+        vals, masks, new_res = compress_clients(updates, sched.crs, acfg,
+                                                residuals)
+        coeffs = jnp.asarray(sched.coefficients, jnp.float32)
+        if acfg.strategy == "bcrs_opwa":
+            agg = opwa_mod.opwa_aggregate(vals, masks, coeffs, acfg.gamma,
+                                          acfg.overlap_d,
+                                          use_kernel=acfg.use_kernel)
+        else:
+            agg = opwa_mod.bcrs_aggregate(vals, coeffs)
+        info["crs"] = sched.crs
+        info["coefficients"] = sched.coefficients
+        info["t_bench"] = sched.t_bench
+        return agg, info, new_res
+
+    raise ValueError(f"unknown strategy {acfg.strategy!r}")

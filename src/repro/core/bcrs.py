@@ -1,0 +1,83 @@
+"""Bandwidth-aware Compression Ratio Scheduling (paper Alg. 2 + Eq. 6).
+
+Given per-client links (bandwidth B_i, latency L_i) and an update of V bytes,
+the slowest client's post-compression time under the default ratio CR* sets
+the benchmark T_bench; every other client's CR is raised to finish at the
+same moment:  CR_i = (T_bench - L_i) * B_i / (2 V).
+
+Client-averaging coefficients (Eq. 6):
+    p'_i = f_i / max(f_i, Norm(CR_i)) * alpha
+The paper leaves Norm() unspecified; we default to sum-normalization
+(same scale as the data fractions f_i) and expose the hook.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List, Sequence
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ClientLink:
+    bandwidth_bps: float     # bits per second
+    latency_s: float
+
+
+def comm_time(v_bytes: float, link: ClientLink, cr: float) -> float:
+    """Paper cost model (Alg. 2 line 7): T = L + 2 * V * CR / B.
+
+    V in *bits* on the wire; the 2x covers the sparse-format index overhead
+    (int32 index + f32 value per retained parameter at fp32 -> 2x values).
+    """
+    v_bits = 8.0 * v_bytes
+    return link.latency_s + 2.0 * v_bits * cr / link.bandwidth_bps
+
+
+def schedule_crs(links: Sequence[ClientLink], v_bytes: float, cr_star: float,
+                 cr_max: float = 1.0) -> np.ndarray:
+    """Alg. 2: equalize upload completion times at the slowest client's pace."""
+    times = np.array([comm_time(v_bytes, l, cr_star) for l in links])
+    t_bench = float(times.max())
+    v_bits = 8.0 * v_bytes
+    crs = np.array([(t_bench - l.latency_s) * l.bandwidth_bps / (2.0 * v_bits)
+                    for l in links])
+    return np.clip(crs, cr_star, cr_max)
+
+
+def norm_sum(crs: np.ndarray) -> np.ndarray:
+    s = crs.sum()
+    return crs / s if s > 0 else crs
+
+
+def client_coefficients(data_fracs: np.ndarray, crs: np.ndarray, alpha: float,
+                        norm: Callable[[np.ndarray], np.ndarray] = norm_sum
+                        ) -> np.ndarray:
+    """Eq. 6: p'_i = f_i / max(f_i, Norm(CR_i)) * alpha (capped at alpha)."""
+    ncr = norm(crs)
+    return data_fracs / np.maximum(data_fracs, ncr) * alpha
+
+
+@dataclass
+class BCRSSchedule:
+    crs: np.ndarray           # per-client compression ratio
+    coefficients: np.ndarray  # per-client averaging coefficient p'_i
+    t_bench: float            # equalized round upload time (seconds)
+
+
+def make_schedule(links: Sequence[ClientLink], data_fracs: np.ndarray,
+                  v_bytes: float, cr_star: float, alpha: float,
+                  cr_max: float = 1.0) -> BCRSSchedule:
+    crs = schedule_crs(links, v_bytes, cr_star, cr_max)
+    coef = client_coefficients(np.asarray(data_fracs, np.float64), crs, alpha)
+    t_bench = max(comm_time(v_bytes, l, cr_star) for l in links)
+    return BCRSSchedule(crs=crs, coefficients=coef, t_bench=t_bench)
+
+
+def pod_link_schedule(dcn_bandwidths_gbps: Sequence[float], v_bytes: float,
+                      cr_star: float, latency_s: float = 1e-3,
+                      cr_max: float = 0.5) -> np.ndarray:
+    """Hierarchical (beyond-paper) variant: per-pod DCN links get CRs from the
+    same Alg. 2 schedule — slow pods compress harder, fast pods send more."""
+    links = [ClientLink(b * 1e9 * 8, latency_s) for b in dcn_bandwidths_gbps]
+    return schedule_crs(links, v_bytes, cr_star, cr_max)

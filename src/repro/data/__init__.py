@@ -1,0 +1,11 @@
+from repro.data.partition import (client_label_histogram, data_fractions,
+                                  dirichlet_partition)
+from repro.data.pipeline import ClientDataset, build_client_datasets
+from repro.data.synthetic import (lm_batch, synthetic_classification,
+                                  synthetic_lm_tokens)
+
+__all__ = [
+    "dirichlet_partition", "client_label_histogram", "data_fractions",
+    "ClientDataset", "build_client_datasets", "synthetic_classification",
+    "synthetic_lm_tokens", "lm_batch",
+]

@@ -1,0 +1,9 @@
+from repro.fed.client import make_local_trainer
+from repro.fed.mesh_round import make_fl_round_step
+from repro.fed.server import FLServer
+from repro.fed.simulation import (FLSimConfig, FLSimResult, mlp_accuracy,
+                                  mlp_init, mlp_loss, run_fl)
+
+__all__ = ["make_local_trainer", "FLServer", "make_fl_round_step",
+           "FLSimConfig", "FLSimResult", "run_fl", "mlp_init", "mlp_loss",
+           "mlp_accuracy"]

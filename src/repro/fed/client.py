@@ -1,0 +1,36 @@
+"""FL client: E local epochs of SGD, update = w_t - w_local (paper Alg. 1
+LocalTraining). Model-agnostic: works with any (init, loss_fn) pair.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import flags
+
+
+def make_local_trainer(loss_fn: Callable, lr: float):
+    """Returns jittable ``local_train(params, batches) -> (delta, last_loss)``
+    where batches is a pytree with leading [n_steps, ...] axes consumed by
+    ``lax.scan`` (E epochs pre-flattened into n_steps)."""
+
+    grad_fn = jax.grad(lambda p, b: loss_fn(p, b)[0])
+
+    def sgd_step(params, batch):
+        grads = grad_fn(params, batch)
+        new = jax.tree.map(lambda p, g: (p - lr * g.astype(p.dtype)).astype(p.dtype),
+                           params, grads)
+        loss = loss_fn(new, batch)[0]
+        return new, loss
+
+    def local_train(params, batches) -> Tuple[Any, jax.Array]:
+        n_steps = jax.tree.leaves(batches)[0].shape[0]
+        final, losses = jax.lax.scan(sgd_step, params, batches,
+                                     unroll=flags.scan_unroll(n_steps))
+        delta = jax.tree.map(lambda a, b: (a - b).astype(a.dtype), params, final)
+        return delta, losses[-1]
+
+    return local_train

@@ -1,0 +1,73 @@
+"""FL server: round orchestration around core.aggregation.
+
+Holds the global model (flat vector + unravel), per-client EF residuals,
+the time accumulator, and applies  w <- w - eta * agg  per round.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation as agg_mod
+from repro.core import bcrs as bcrs_mod
+from repro.core import cost_model
+from repro.core.compression import flatten_tree
+
+
+@dataclass
+class FLServer:
+    params: object                      # global model pytree
+    acfg: agg_mod.AggregationConfig
+    eta: float = 1.0                    # server learning rate on the update
+    links: Optional[List[bcrs_mod.ClientLink]] = None
+    times: cost_model.TimeAccumulator = field(
+        default_factory=cost_model.TimeAccumulator)
+    _residuals: Optional[jax.Array] = None
+
+    def __post_init__(self):
+        flat, self._unravel = flatten_tree(self.params)
+        self._flat = flat.astype(jnp.float32)
+        self.n_params = int(flat.shape[0])
+        self.v_bytes = float(self.n_params * 4)   # fp32 update bytes
+
+    # ------------------------------------------------------------------
+    def round(self, client_deltas: List, data_fracs: np.ndarray,
+              selected: np.ndarray) -> dict:
+        """Aggregate one round. client_deltas: list of pytrees (w_t - w_i).
+        ``selected``: client indices (for link lookup). Returns info dict."""
+        flat_updates = jnp.stack([flatten_tree(d)[0].astype(jnp.float32)
+                                  for d in client_deltas])
+        links = ([self.links[i] for i in selected]
+                 if self.links is not None else None)
+        if self.acfg.strategy == "eftopk":
+            if (self._residuals is None
+                    or self._residuals.shape[0] != flat_updates.shape[0]):
+                self._residuals = jnp.zeros_like(flat_updates)
+            agg, info, new_res = agg_mod.aggregate(
+                flat_updates, data_fracs, self.acfg, links=links,
+                v_bytes=self.v_bytes, residuals=self._residuals)
+            self._residuals = new_res
+        else:
+            agg, info, _ = agg_mod.aggregate(
+                flat_updates, data_fracs, self.acfg, links=links,
+                v_bytes=self.v_bytes)
+        self._flat = self._flat - self.eta * agg
+        self.params = self._unravel(self._flat)
+
+        # --- time accounting (paper §5.2 metrics)
+        if links is not None:
+            if "crs" in info:
+                crs = info["crs"]
+            else:
+                crs = np.ones(len(links))
+            if self.acfg.strategy == "fedavg":
+                rt = cost_model.uncompressed_round(links, self.v_bytes)
+            else:
+                rt = cost_model.round_times(links, self.v_bytes, crs)
+            self.times.add(rt)
+            info["round_time"] = rt
+        return info

@@ -1,0 +1,6 @@
+from repro.ft.failures import ElasticPool, FailureInjector
+from repro.ft.straggler import (StragglerPolicy, arrivals, over_select,
+                                renormalize_coefficients)
+
+__all__ = ["FailureInjector", "ElasticPool", "StragglerPolicy", "arrivals",
+           "over_select", "renormalize_coefficients"]

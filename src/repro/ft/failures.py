@@ -1,0 +1,47 @@
+"""Failure injection + elastic cohort management for FL / multi-pod training.
+
+Node (client) failures during a round surface as missing updates; the server
+aggregates the survivors with renormalized coefficients (see straggler.py).
+Whole-job failures recover from the atomic checkpoint (checkpoint/) — the
+training drivers resume from ``latest_step`` automatically.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclass
+class FailureInjector:
+    """Deterministic failure schedule for tests/sims: client i fails in round
+    r with probability p (per-round, iid), or at explicit (round, client)."""
+    p_fail: float = 0.0
+    scheduled: Optional[Sequence] = None   # [(round, client), ...]
+    seed: int = 0
+
+    def survivors(self, round_idx: int, n_clients: int) -> np.ndarray:
+        rng = np.random.default_rng(self.seed * 100_003 + round_idx)
+        alive = rng.random(n_clients) >= self.p_fail
+        if self.scheduled:
+            for r, c in self.scheduled:
+                if r == round_idx and c < n_clients:
+                    alive[c] = False
+        if not alive.any():      # never lose the whole cohort
+            alive[int(rng.integers(n_clients))] = True
+        return alive
+
+
+@dataclass
+class ElasticPool:
+    """Client pool that can grow/shrink between rounds (elastic scaling).
+    Selection always samples from the currently-registered set."""
+    n_registered: int
+
+    def scale(self, delta: int) -> None:
+        self.n_registered = max(1, self.n_registered + delta)
+
+    def sample(self, frac: float, rng: np.random.Generator) -> np.ndarray:
+        n_sel = max(1, int(round(self.n_registered * frac)))
+        return rng.choice(self.n_registered, size=n_sel, replace=False)

@@ -1,0 +1,55 @@
+"""Straggler mitigation for FL rounds.
+
+BCRS already equalizes *communication* time; compute stragglers are handled
+by over-selection + deadline: select (1+rho)·C·N clients, aggregate the first
+C·N arrivals, renormalize coefficients over the arrived set. Late updates are
+dropped (FedAvg-compatible, no staleness correction needed).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class StragglerPolicy:
+    over_selection: float = 0.25     # rho
+    deadline_factor: float = 1.5     # x median round time -> hard deadline
+
+
+def over_select(n_target: int, policy: StragglerPolicy) -> int:
+    return int(np.ceil(n_target * (1.0 + policy.over_selection)))
+
+
+def arrivals(times: Sequence[float], n_target: int,
+             policy: StragglerPolicy) -> Tuple[np.ndarray, float]:
+    """Given per-client round completion times, pick the aggregation set:
+    first ``n_target`` arrivals, capped by the deadline. Returns
+    (bool mask over clients, effective round duration)."""
+    t = np.asarray(times)
+    order = np.argsort(t)
+    deadline = policy.deadline_factor * float(np.median(t))
+    chosen = np.zeros(len(t), bool)
+    took = 0
+    for i in order:
+        if took >= n_target and t[i] > deadline:
+            break
+        chosen[i] = True
+        took += 1
+        if took >= n_target:
+            break
+    dur = float(t[chosen].max()) if chosen.any() else 0.0
+    return chosen, dur
+
+
+def renormalize_coefficients(coeffs: np.ndarray, arrived: np.ndarray
+                             ) -> np.ndarray:
+    """Keep arrived clients' relative weights; zero the rest; rescale so the
+    total server step magnitude is preserved (elastic cohort resize)."""
+    out = np.where(arrived, coeffs, 0.0)
+    s_all, s_in = coeffs.sum(), out.sum()
+    if s_in > 0:
+        out *= s_all / s_in
+    return out

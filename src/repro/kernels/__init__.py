@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the compression hot path:
+
+  block_topk       per-VMEM-block magnitude Top-K via threshold bisection
+  overlap_combine  fused OPWA aggregation (counts + mask + weighted sum)
+  ef_update        fused error-feedback Top-K step
+
+Each has a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py; validated
+in interpret mode on CPU, targeted at TPU VMEM tiling (8 x 128 lanes).
+"""

@@ -1,0 +1,99 @@
+"""jit'd public wrappers for the Pallas kernels: padding/reshaping to tile
+boundaries, CPU interpret-mode autodetection, flat-vector interfaces used by
+repro.core."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression import Compressed, k_for_ratio
+from repro.kernels.block_topk import ROWS_TILE, block_topk_pallas
+from repro.kernels.ef_update import ef_update_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.overlap_combine import TILE_N, overlap_combine_pallas
+
+
+def _interpret() -> bool:
+    return jax.devices()[0].platform != "tpu"
+
+
+def _pad_rows(n_rows: int) -> int:
+    return (-n_rows) % ROWS_TILE
+
+
+@functools.partial(jax.jit, static_argnames=("cr", "block"))
+def block_topk(u: jax.Array, cr: float, block: int = 8192) -> Compressed:
+    """Flat vector -> block-top-k Compressed (kernel-backed)."""
+    n = u.shape[0]
+    n_pad = (-n) % block
+    up = jnp.pad(u.astype(jnp.float32), (0, n_pad))
+    nb = up.shape[0] // block
+    x2d = up.reshape(nb, block)
+    rpad = _pad_rows(nb)
+    if rpad:
+        x2d = jnp.pad(x2d, ((0, rpad), (0, 0)))
+    k = k_for_ratio(block, cr)
+    vals, mask = block_topk_pallas(x2d, k, interpret=_interpret())
+    vals = vals[:nb].reshape(-1)[:n].astype(u.dtype)
+    mask = mask[:nb].reshape(-1)[:n] > 0
+    return Compressed(vals, mask)
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "d"))
+def overlap_combine(vals: jax.Array, masks: jax.Array, coeffs: jax.Array,
+                    gamma: float, d: int) -> jax.Array:
+    """[K,n] masked updates + [K,n] masks + [K] coeffs -> OPWA-aggregated [n]."""
+    k, n = vals.shape
+    n_pad = (-n) % TILE_N
+    v = jnp.pad(vals.astype(jnp.float32), ((0, 0), (0, n_pad)))
+    m = jnp.pad(masks.astype(jnp.int8), ((0, 0), (0, n_pad)))
+    out = overlap_combine_pallas(v, m, coeffs.astype(jnp.float32),
+                                 float(gamma), int(d),
+                                 interpret=_interpret())
+    return out[0, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("cr", "block"))
+def ef_topk_update(g: jax.Array, residual: jax.Array, cr: float,
+                   block: int = 8192):
+    """Fused EF step on flat vectors -> (send [n], new_residual [n])."""
+    n = g.shape[0]
+    n_pad = (-n) % block
+    gp = jnp.pad(g.astype(jnp.float32), (0, n_pad))
+    ep = jnp.pad(residual.astype(jnp.float32), (0, n_pad))
+    nb = gp.shape[0] // block
+    g2d, e2d = gp.reshape(nb, block), ep.reshape(nb, block)
+    rpad = _pad_rows(nb)
+    if rpad:
+        g2d = jnp.pad(g2d, ((0, rpad), (0, 0)))
+        e2d = jnp.pad(e2d, ((0, rpad), (0, 0)))
+    k = k_for_ratio(block, cr)
+    send, new_e = ef_update_pallas(g2d, e2d, k, interpret=_interpret())
+    return (send[:nb].reshape(-1)[:n], new_e[:nb].reshape(-1)[:n])
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, blk_q: int = 128,
+                    blk_k: int = 128) -> jax.Array:
+    """Model-layout wrapper: q [B,S,H,D], k/v [B,S,H,D] (equal heads; GQA
+    callers broadcast kv first). Pads Sq/Sk to block multiples."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    qt = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kt = k.transpose(0, 2, 1, 3).reshape(b * h, sk, d)
+    vt = v.transpose(0, 2, 1, 3).reshape(b * h, sk, d)
+    pq, pk = (-sq) % blk_q, (-sk) % blk_k
+    if pq:
+        qt = jnp.pad(qt, ((0, 0), (0, pq), (0, 0)))
+    if pk:
+        # padded keys sit at positions >= Sk: causal-masked away for every
+        # real query position (non-causal callers must pad Sk themselves)
+        assert causal, "non-causal flash with Sk % blk_k != 0 unsupported"
+        kt = jnp.pad(kt, ((0, 0), (0, pk), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, pk), (0, 0)))
+    out = flash_attention_pallas(qt, kt, vt, causal=causal, blk_q=blk_q,
+                                 blk_k=blk_k, interpret=_interpret())
+    out = out[:, :sq].reshape(b, h, sq, d).transpose(0, 2, 1, 3)
+    return out

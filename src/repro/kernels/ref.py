@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel (exact semantics incl. ties)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def block_topk_ref(x2d: jax.Array, k: int):
+    """[nb, block] -> (values, mask int8). Keeps |x| >= k-th largest (ties kept)."""
+    mag = jnp.abs(x2d.astype(jnp.float32))
+    thresh = jax.lax.top_k(mag, k)[0][:, -1:]
+    mask = mag >= thresh
+    return jnp.where(mask, x2d, 0), mask.astype(jnp.int8)
+
+
+def overlap_combine_ref(vals: jax.Array, masks: jax.Array, coeffs: jax.Array,
+                        gamma: float, d: int) -> jax.Array:
+    """[K,n] masked values, [K,n] masks, [K] coeffs -> [1,n] f32."""
+    counts = jnp.sum(masks.astype(jnp.int32), axis=0, keepdims=True)
+    weighted = jnp.einsum("k,kn->n", coeffs.astype(jnp.float32),
+                          vals.astype(jnp.float32))[None, :]
+    m = jnp.where((counts > 0) & (counts <= d), jnp.float32(gamma), 1.0)
+    return m * weighted
+
+
+def ef_update_ref(g2d: jax.Array, e2d: jax.Array, k: int):
+    corrected = e2d.astype(jnp.float32) + g2d.astype(jnp.float32)
+    send, _ = block_topk_ref(corrected, k)
+    return send, corrected - send
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """[BH, Sq, D] x [BH, Sk, D] -> [BH, Sq, D]; f32 softmax."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (d ** 0.5)
+    if causal:
+        sq, sk = s.shape[-2:]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w, v.astype(jnp.float32)).astype(q.dtype)

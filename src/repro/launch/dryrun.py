@@ -1,0 +1,170 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes and record memory/cost/collective evidence.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Writes one JSON per cell under experiments/dryrun/<mesh>/<arch>__<shape>[__step].json
+with memory_analysis, cost_analysis, collective summary, and roofline terms.
+The XLA_FLAGS line above MUST run before any jax import (device count locks
+on first init) — and only here: smoke tests/benches keep 1 device.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, SHAPES, applicability, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell
+from repro.roofline import analysis as roofline
+from repro.roofline import hlo_cost
+
+
+def _analyze_compiled(compiled, mesh):
+    """Per-device (flops, bytes, wire-ici dict, wire-dcn dict) from the
+    compiled HLO via the trip-count-aware cost model (roofline/hlo_cost)."""
+    pod_size = 256 if "pod" in mesh.axis_names else None
+    cost = hlo_cost.analyze_hlo(compiled.as_text(), mesh.size, pod_size)
+    ici, dcn = cost.by_kind()
+    return cost.flops, cost.bytes, ici, dcn
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_tag: str,
+             step: str = "auto", out_dir: str = "experiments/dryrun",
+             verbose: bool = True, overrides=None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = applicability(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag, "step": step}
+    if not ok:
+        rec.update(skipped=True, reason=reason)
+        _write(rec, out_dir, mesh_tag, arch, shape_name, step)
+        if verbose:
+            print(f"[skip] {arch} × {shape_name} ({mesh_tag}): {reason}")
+        return rec
+    try:
+        t0 = time.time()
+        cell = build_cell(arch, shape_name, mesh, step, overrides=overrides)
+        with mesh:
+            jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                             out_shardings=cell.out_shardings,
+                             donate_argnums=cell.donate_argnums)
+            lowered = jitted.lower(*cell.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        mflops = roofline.model_flops(cfg, shape)
+        per_dev_bytes = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                         + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+        # HLO cost with while-loop trip multipliers (XLA cost_analysis counts
+        # loop bodies once; see roofline/hlo_cost.py + EXPERIMENTS.md)
+        t1 = time.time()
+        flops, nbytes, ici, dcn = _analyze_compiled(compiled, mesh)
+        t_extrap = time.time() - t1
+        ici_s = sum(ici.values()) / roofline.ICI_BW
+        dcn_s = sum(dcn.values()) / roofline.DCN_BW
+        rf = roofline.Roofline(
+            compute_s=flops / roofline.PEAK_FLOPS,
+            memory_s=nbytes / roofline.HBM_BW,
+            collective_s=ici_s + dcn_s,
+            flops_per_device=flops,
+            bytes_per_device=nbytes,
+            wire_bytes_per_device=sum(ici.values()) + sum(dcn.values()),
+            model_flops_global=mflops,
+            hlo_total_flops_global=flops * mesh.size,
+            n_devices=mesh.size,
+            coll_by_kind={**{f"ici/{k}": v for k, v in ici.items()},
+                          **{f"dcn/{k}": v for k, v in dcn.items()}},
+            n_collectives=-1,
+        )
+        rec.update(
+            skipped=False, step=cell.meta["step"],
+            n_params=cell.meta["n_params"], n_active=cell.meta["n_active"],
+            n_micro=cell.meta.get("n_micro"),
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            hlo_analysis_s=round(t_extrap, 2),
+            memory={
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "per_device_bytes": per_dev_bytes,
+                "per_device_gib": round(per_dev_bytes / 2**30, 3),
+                "fits_16gib": per_dev_bytes < 16 * 2**30,
+            },
+            cost={"flops_per_device": flops,
+                  "bytes_per_device": nbytes},
+            model_flops_global=mflops,
+            roofline=rf.to_dict(),
+        )
+        if verbose:
+            print(f"[ok]   {arch} × {shape_name} ({mesh_tag}, {rec['step']}): "
+                  f"{rec['memory']['per_device_gib']} GiB/dev "
+                  f"(fits={rec['memory']['fits_16gib']}), "
+                  f"dom={rf.dominant}, frac={rf.compute_fraction:.3f}, "
+                  f"compile {t_compile:.1f}s hlo {t_extrap:.1f}s")
+    except Exception as e:  # a failing cell is a bug — record it loudly
+        rec.update(skipped=False, ok=False, error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        if verbose:
+            print(f"[FAIL] {arch} × {shape_name} ({mesh_tag}): "
+                  f"{type(e).__name__}: {e}")
+    rec.setdefault("ok", "error" not in rec)
+    _write(rec, out_dir, mesh_tag, arch, shape_name, step)
+    return rec
+
+
+def _write(rec, out_dir, mesh_tag, arch, shape_name, step):
+    d = os.path.join(out_dir, mesh_tag)
+    os.makedirs(d, exist_ok=True)
+    suffix = "" if step == "auto" else f"__{step}"
+    path = os.path.join(d, f"{arch}__{shape_name}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--step", default="auto",
+                    choices=["auto", "train", "train_compressed", "prefill",
+                             "serve", "fl_round"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("pod1", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("pod2", make_production_mesh(multi_pod=True)))
+
+    archs = ARCH_IDS if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+
+    n_fail = 0
+    for tag, mesh in meshes:
+        for arch in archs:
+            for shape in shapes:
+                rec = run_cell(arch, shape, mesh, tag, args.step, args.out)
+                if not rec.get("skipped") and not rec.get("ok", True):
+                    n_fail += 1
+    if n_fail:
+        raise SystemExit(f"{n_fail} cells FAILED")
+    print("all requested cells passed")
+
+
+if __name__ == "__main__":
+    main()

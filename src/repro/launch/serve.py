@@ -1,0 +1,71 @@
+"""Serving driver: batched prefill + decode with KV caches.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \
+        --batch 4 --prompt-len 16 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import Model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="stablelm-1.6b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = Model(cfg)
+    rng = np.random.default_rng(args.seed)
+    params = model.init(jax.random.PRNGKey(args.seed))
+
+    max_len = args.prompt_len + args.gen
+    cache = model.init_cache(args.batch, max_len,
+                             jnp.float32 if args.reduced else jnp.bfloat16)
+    decode = jax.jit(model.decode_step)
+
+    # prefill by stepping the decoder over the prompt (cache-exact; a fused
+    # prefill path exists for the dry-run via model.prefill)
+    prompt = rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len))
+    t0 = time.time()
+    logits = None
+    for pos in range(args.prompt_len):
+        logits, cache = decode(params, cache,
+                               jnp.asarray(prompt[:, pos], jnp.int32),
+                               jnp.int32(pos))
+    t_prefill = time.time() - t0
+
+    toks = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)
+    out = [np.asarray(toks)]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        logits, cache = decode(params, cache, toks,
+                               jnp.int32(args.prompt_len + i))
+        toks = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)
+        out.append(np.asarray(toks))
+    t_gen = time.time() - t0
+    gen = np.stack(out, 1)
+    print(f"[serve] arch={args.arch} batch={args.batch} "
+          f"prefill {args.prompt_len} tok in {t_prefill:.2f}s; "
+          f"generated {gen.shape[1]} tok in {t_gen:.2f}s "
+          f"({args.batch * gen.shape[1] / max(t_gen, 1e-9):.1f} tok/s)")
+    print("[serve] sample tokens:", gen[0, :16].tolist())
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,243 @@
+"""Per-cell step builders for the dry-run / launchers.
+
+``build_cell(arch, shape, mesh, step)`` returns the jittable step, its
+abstract inputs (ShapeDtypeStruct — no allocation), and in/out shardings.
+
+Step selection by shape kind: train -> train_step, prefill -> prefill,
+decode/long_decode -> serve_step. ``fl_round`` lowers the mesh-parallel FL
+round (the paper's technique) for any train-shape cell; ``train_compressed``
+lowers the hierarchical compressed-pod-sync step (beyond-paper).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.dist import sharding as shd
+from repro.dist.grad_sync import make_compressed_train_step, make_train_step
+from repro.fed.mesh_round import make_fl_round_step
+from repro.models import Model
+from repro.optim import make_optimizer
+
+SDS = jax.ShapeDtypeStruct
+
+
+class Cell(NamedTuple):
+    fn: Any
+    args: Tuple
+    in_shardings: Tuple
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    meta: Dict[str, Any]
+
+
+def batch_abstract(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, SDS]:
+    b, s = shape.global_batch, shape.seq_len
+    out = {"tokens": SDS((b, s), jnp.int32), "labels": SDS((b, s), jnp.int32)}
+    if cfg.family == "encdec":
+        out["frames"] = SDS((b, s, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        v = cfg.vision
+        out["patches"] = SDS((b, v.n_patches, v.d_vision), jnp.bfloat16)
+    return out
+
+
+def _named(mesh, tree):
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _scalar_specs(mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def depth_variants(cfg: ModelConfig):
+    """Two reduced-depth configs for HLO-cost extrapolation (XLA counts
+    while-loop bodies once; cost is linear in the scanned unit count m:
+    cost(m) = top + m*body). Returns ((ovr_a, m_a), (ovr_b, m_b), m_full)."""
+    if cfg.family == "vlm":
+        v = cfg.vision
+        per = cfg.n_layers // v.n_cross_layers
+        return (({"n_layers": per, "vision": dataclasses.replace(v, n_cross_layers=1)}, 1),
+                ({"n_layers": 2 * per, "vision": dataclasses.replace(v, n_cross_layers=2)}, 2),
+                v.n_cross_layers)
+    if cfg.family == "encdec":
+        e = cfg.encdec
+        return (({"n_layers": 2, "encdec": dataclasses.replace(e, n_enc_layers=2)}, 2),
+                ({"n_layers": 4, "encdec": dataclasses.replace(e, n_enc_layers=4)}, 4),
+                cfg.n_layers)
+    if cfg.family == "moe":
+        fd = cfg.moe.first_dense_layers
+        return (({"n_layers": fd + 1}, 1), ({"n_layers": fd + 3}, 3),
+                cfg.n_layers - fd)
+    if cfg.family == "hybrid":
+        return (({"n_layers": 2, "global_layers": (0,)}, 2),
+                ({"n_layers": 4, "global_layers": (0,)}, 4), cfg.n_layers)
+    return (({"n_layers": 2}, 2), ({"n_layers": 4}, 4), cfg.n_layers)
+
+
+def choose_n_micro(cfg: ModelConfig, shape: ShapeConfig, mesh) -> int:
+    """Gradient-accumulation factor bounding activation memory: target
+    per-device tokens per microbatch (tighter for FSDP archs, whose HBM is
+    dominated by params+grads)."""
+    msh = dict(mesh.shape)
+    n_batch = msh.get("pod", 1) * msh.get("data", 1)
+    b_loc = max(shape.global_batch // n_batch, 1)
+    tokens_per_dev = b_loc * shape.seq_len
+    fsdp = cfg.n_params() >= cfg.fsdp_threshold
+    target = 4096 if fsdp else 16384
+    if cfg.family == "hybrid":   # parallel attn+SSM branches double the
+        target = 8192            # per-token activation footprint
+    if cfg.family == "moe" and fsdp:
+        # FSDP expert-weight all-gathers repeat per microbatch and dominate
+        # the collective term — fewer/larger microbatches trade activation
+        # memory for a ~1/n_micro cut in weight-gather wire (§Perf iter 6)
+        target = 8192
+    n_micro = 1
+    while (tokens_per_dev // n_micro > target
+           and n_micro * 2 <= shape.global_batch
+           and shape.global_batch % (n_micro * 2) == 0):
+        n_micro *= 2
+    return n_micro
+
+
+def build_cell(arch: str, shape_name: str, mesh, step: str = "auto",
+               *, optimizer: str = "sgd", lr: float = 1e-2,
+               fl_local_steps: int = 2, compressed_cr: float = 0.01,
+               overrides: Optional[dict] = None,
+               n_micro: Optional[int] = None) -> Cell:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    rules = shd.make_rules(cfg, shape, mesh)
+    shd.set_rules(rules)
+    model = Model(cfg)
+    params_abs = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = shd.param_specs(cfg, params_abs)
+    pshard = _named(mesh, pspecs)
+
+    if step == "auto":
+        step = {"train": "train", "prefill": "prefill",
+                "decode": "serve", "long_decode": "serve"}[shape.kind]
+
+    meta = {"arch": arch, "shape": shape_name, "step": step,
+            "n_params": cfg.n_params(), "n_active": cfg.n_active_params(),
+            "n_devices": mesh.size}
+
+    if step in ("train", "train_compressed"):
+        opt = make_optimizer(optimizer, lr)
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        if jax.tree.leaves(opt_abs):
+            # optimizer state follows the param specs (ZeRO-style)
+            oshard = _named(mesh, _opt_specs_like(opt_abs, pspecs))
+        else:
+            oshard = opt_abs
+        batch_abs = batch_abstract(cfg, shape)
+        bshard = _named(mesh, shd.batch_specs(cfg, batch_abs))
+        if step == "train":
+            nm = n_micro if n_micro is not None else choose_n_micro(cfg, shape, mesh)
+            meta["n_micro"] = nm
+            # the micro-scan body (fwd+bwd over one microbatch) is counted
+            # once by HLO cost analysis but runs n_micro times
+            meta["cost_multiplier"] = nm
+            fn = make_train_step(model, opt, n_micro=nm,
+                                 grad_shardings=pshard)
+            args = (params_abs, opt_abs, batch_abs)
+            metrics_abs = jax.eval_shape(fn, *args)[2]
+            return Cell(fn, args, (pshard, oshard, bshard),
+                        (pshard, oshard, _scalar_specs(mesh, metrics_abs)),
+                        (0, 1), meta)
+        n_pods = max(dict(mesh.shape).get("pod", 1), 2)
+        # single-pod: compress across 2 data halves (same machinery)
+        fn = make_compressed_train_step(model, opt, n_pods=n_pods,
+                                        wire_cr=compressed_cr, gamma=2.0)
+        crs_abs = SDS((n_pods,), jnp.float32)
+        coef_abs = SDS((n_pods,), jnp.float32)
+        args = (params_abs, opt_abs, batch_abs, crs_abs, coef_abs)
+        metrics_abs = jax.eval_shape(fn, *args)[2]
+        rshard = NamedSharding(mesh, P())
+        return Cell(fn, args, (pshard, oshard, bshard, rshard, rshard),
+                    (pshard, oshard, _scalar_specs(mesh, metrics_abs)),
+                    (0, 1), meta)
+
+    if step == "prefill":
+        batch_abs = batch_abstract(cfg, shape)
+        bshard = _named(mesh, shd.batch_specs(cfg, batch_abs))
+
+        def fn(params, batch):
+            return model.prefill(params, batch)[0]
+
+        logit_shard = NamedSharding(mesh, rules.logical(("batch", "vocab")))
+        return Cell(fn, (params_abs, batch_abs), (pshard, bshard),
+                    logit_shard, (), meta)
+
+    if step == "serve":
+        b = shape.global_batch
+        cache_abs = jax.eval_shape(
+            lambda: model.init_cache(b, shape.seq_len, jnp.bfloat16))
+        cspecs = shd.cache_specs(cfg, cache_abs)
+        cshard = _named(mesh, cspecs)
+        tok_abs = SDS((b,), jnp.int32)
+        pos_abs = SDS((), jnp.int32)
+        tshard = NamedSharding(mesh, rules.logical(("batch",)))
+        sshard = NamedSharding(mesh, P())
+
+        def fn(params, cache, tokens, pos):
+            return model.decode_step(params, cache, tokens, pos)
+
+        logit_shard = NamedSharding(mesh, rules.logical(("batch", "vocab")))
+        return Cell(fn, (params_abs, cache_abs, tok_abs, pos_abs),
+                    (pshard, cshard, tshard, sshard),
+                    (logit_shard, cshard), (1,), meta)
+
+    if step == "fl_round":
+        msh = dict(mesh.shape)
+        n_clients = 1
+        for a in rules.batch_axes:
+            n_clients *= msh[a]
+        # cap per-client/step batch: one client maps to one data slice, so
+        # its whole local batch lands on 16 chips — bound the activations
+        bs = min(max(shape.global_batch // n_clients, 1), 4)
+        cb = {"tokens": SDS((n_clients, fl_local_steps, bs, shape.seq_len),
+                            jnp.int32),
+              "labels": SDS((n_clients, fl_local_steps, bs, shape.seq_len),
+                            jnp.int32)}
+        if cfg.family == "encdec":
+            cb["frames"] = SDS((n_clients, fl_local_steps, bs, shape.seq_len,
+                                cfg.d_model), jnp.bfloat16)
+        if cfg.family == "vlm":
+            v = cfg.vision
+            cb["patches"] = SDS((n_clients, fl_local_steps, bs, v.n_patches,
+                                 v.d_vision), jnp.bfloat16)
+        cbspec = jax.tree.map(
+            lambda l: P(*((rules.batch_axes,) + (None,) * (len(l.shape) - 1))),
+            cb)
+        cbshard = _named(mesh, cbspec)
+        coef_abs = SDS((n_clients,), jnp.float32)
+        crs_abs = SDS((n_clients,), jnp.float32)
+        vshard = NamedSharding(mesh, P())
+        fn = make_fl_round_step(model, lr_local=lr)
+        meta["n_clients"] = n_clients
+        # local-steps scan body counted once by HLO cost analysis
+        meta["cost_multiplier"] = fl_local_steps
+        return Cell(fn, (params_abs, cb, coef_abs, crs_abs),
+                    (pshard, cbshard, vshard, vshard),
+                    (pshard, NamedSharding(mesh, P())), (0,), meta)
+
+    raise ValueError(f"unknown step {step!r}")
+
+
+def _opt_specs_like(opt_abs, pspecs):
+    """Optimizer-state specs mirroring param specs (momentum/adam trees)."""
+    if isinstance(opt_abs, dict) and "m" in opt_abs:   # adamw
+        return {"m": pspecs, "v": pspecs, "t": P()}
+    return pspecs                                       # momentum

@@ -1,0 +1,18 @@
+"""Global model-lowering flags.
+
+COST_EXACT: set (only) by the dry-run's cost-measurement compiles. XLA's
+cost_analysis counts while-loop bodies ONCE regardless of trip count, so
+rolled scans (layers, attention q-chunks, GLA chunks, FL local steps) hide
+their true FLOPs/bytes/collectives. In cost-exact mode every scan is fully
+unrolled (``unroll=length``) at small layer depths; the dry-run then fits
+cost(m) = top + m·body over two depths and evaluates at the full depth.
+Never enabled for the memory/fits compile (rolled scans are the production
+lowering).
+"""
+
+COST_EXACT = False
+
+
+def scan_unroll(length: int) -> int:
+    """unroll arg for lax.scan at the given trip count."""
+    return length if COST_EXACT else 1

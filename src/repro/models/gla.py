@@ -1,0 +1,161 @@
+"""Chunked gated linear attention — the TPU-native form of RWKV6's WKV
+recurrence and Mamba-2/SSD's selective scan (see DESIGN.md §2).
+
+Recurrence (per batch b, head h; Dk = key dim, Dv = value dim):
+
+    S_t = diag(exp(g_t)) S_{t-1} + k_t ⊗ v_t          (g_t <= 0)
+    o_t = r_t · S_{t-1} + (r_t · (u ⊙ k_t)) v_t        [rwkv mode, bonus u]
+    o_t = r_t · S_t                                    [ssd mode, inclusive]
+
+The chunked algorithm factors decay products as exp of *differences* of
+cumulative log-decay, which are always <= 0 within a chunk — numerically safe
+in f32 with no range tricks. Intra-chunk pairwise terms use an explicit
+[c, c, Dk] log-space tensor for vector decay (exact) and a plain matmul with a
+[c, c] decay matrix for scalar decay (MXU-aligned).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import flags
+
+
+def _chunk_vector(r, k, v, g, u, s0, inclusive: bool):
+    """One chunk, per-channel decay. r,k,g: [B,H,c,Dk]; v: [B,H,c,Dv];
+    u: [H,Dk] or None; s0: [B,H,Dk,Dv]."""
+    c = r.shape[2]
+    cin = jnp.cumsum(g, axis=2)                      # inclusive cumsum
+    cex = cin - g                                     # exclusive
+    qdec = cin if inclusive else cex                  # decay applied to queries
+    # inter-chunk: (r ⊙ exp(qdec)) · S0
+    r_dec = r * jnp.exp(qdec)
+    o = jnp.einsum("bhcd,bhde->bhce", r_dec, s0)
+    # intra-chunk pairwise: A[i,j] = sum_d r[i,d] k[j,d] exp(qdec[i,d]-cin[j,d])
+    diff = qdec[:, :, :, None, :] - cin[:, :, None, :, :]      # [B,H,c,c,Dk]
+    diff = jnp.minimum(diff, 0.0)                     # j>i region masked below
+    w = jnp.exp(diff)
+    scores = jnp.einsum("bhid,bhjd,bhijd->bhij", r, k, w)
+    i_idx = jnp.arange(c)
+    mask = (i_idx[:, None] >= i_idx[None, :]) if inclusive else (i_idx[:, None] > i_idx[None, :])
+    scores = jnp.where(mask, scores, 0.0)
+    o = o + jnp.einsum("bhij,bhje->bhie", scores, v)
+    if u is not None:  # rwkv bonus: current token contributes via u
+        bonus = jnp.einsum("bhcd,hd,bhcd->bhc", r, u, k)
+        o = o + bonus[..., None] * v
+    # state update: S' = diag(exp(cin_last)) S0 + sum_j exp(cin_last - cin_j) k_j ⊗ v_j
+    cl = cin[:, :, -1:, :]                            # [B,H,1,Dk]
+    k_dec = k * jnp.exp(cl - cin)
+    s1 = jnp.exp(cl[:, :, 0, :, None]) * s0 + jnp.einsum("bhcd,bhce->bhde", k_dec, v)
+    return o, s1
+
+
+def _chunk_scalar(r, k, v, g, u, s0, inclusive: bool):
+    """One chunk, per-head scalar decay. g: [B,H,c]; u: [H,Dk] or None."""
+    c = r.shape[2]
+    cin = jnp.cumsum(g, axis=2)
+    qdec = cin if inclusive else cin - g
+    r_dec = r * jnp.exp(qdec)[..., None]
+    o = jnp.einsum("bhcd,bhde->bhce", r_dec, s0)
+    dmat = jnp.exp(jnp.minimum(qdec[:, :, :, None] - cin[:, :, None, :], 0.0))
+    scores = jnp.einsum("bhid,bhjd->bhij", r, k) * dmat
+    i_idx = jnp.arange(c)
+    mask = (i_idx[:, None] >= i_idx[None, :]) if inclusive else (i_idx[:, None] > i_idx[None, :])
+    scores = jnp.where(mask, scores, 0.0)
+    o = o + jnp.einsum("bhij,bhje->bhie", scores, v)
+    if u is not None:  # bonus: current token weighted by u
+        bonus = jnp.einsum("bhcd,hd,bhcd->bhc", r, u, k)
+        o = o + bonus[..., None] * v
+    cl = cin[:, :, -1:]
+    k_dec = k * jnp.exp(cl - cin)[..., None]
+    s1 = jnp.exp(cl)[..., None] * s0 + jnp.einsum("bhcd,bhce->bhde", k_dec, v)
+    return o, s1
+
+
+def chunked_gla(r, k, v, g, *, u: Optional[jax.Array] = None,
+                chunk: int = 64, inclusive: bool = False,
+                initial_state: Optional[jax.Array] = None,
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Sequence-parallel gated linear attention.
+
+    r, k: [B, H, T, Dk]; v: [B, H, T, Dv];
+    g: log-decay, [B, H, T, Dk] (vector) or [B, H, T] (scalar), g <= 0.
+    u: [H, Dk] rwkv bonus (vector mode only). inclusive=True -> SSD semantics.
+    Returns (o [B, H, T, Dv], final_state [B, H, Dk, Dv]). Computation in f32.
+    """
+    b, h, t, dk = r.shape
+    dv = v.shape[-1]
+    scalar = g.ndim == 3
+    f32 = lambda x: x.astype(jnp.float32)
+    r, k, v, g = f32(r), f32(k), f32(v), f32(g)
+    if u is not None:
+        u = f32(u)
+    if initial_state is None:
+        s = jnp.zeros((b, h, dk, dv), jnp.float32)
+    else:
+        s = f32(initial_state)
+    assert t % chunk == 0, f"T={t} not divisible by chunk={chunk}"
+    nc = t // chunk
+
+    def split(x):  # [B,H,T,...] -> [nc,B,H,c,...]
+        return x.reshape(b, h, nc, chunk, *x.shape[3:]).transpose(2, 0, 1, 3, *range(4, x.ndim + 1))
+
+    rs, ks, vs, gs = split(r), split(k), split(v), split(g)
+
+    # checkpoint the chunk body: the scan would otherwise stack every
+    # chunk's [c,c,(Dk)] pairwise tensors for backward
+    @jax.checkpoint
+    def chunk_fn(s_c, rc, kc, vc, gc):
+        if scalar:
+            return _chunk_scalar(rc, kc, vc, gc, u, s_c, inclusive)
+        return _chunk_vector(rc, kc, vc, gc, u, s_c, inclusive)
+
+    def body(s_c, xs):
+        rc, kc, vc, gc = xs
+        o, s_n = chunk_fn(s_c, rc, kc, vc, gc)
+        return s_n, o
+
+    s_final, outs = jax.lax.scan(body, s, (rs, ks, vs, gs),
+                                 unroll=flags.scan_unroll(nc))
+    o = outs.transpose(1, 2, 0, 3, 4).reshape(b, h, t, dv)
+    return o, s_final
+
+
+def gla_decode(r, k, v, g, state, *, u: Optional[jax.Array] = None,
+               inclusive: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """One-token recurrent step. r,k,g: [B,H,Dk] (g scalar: [B,H]);
+    v: [B,H,Dv]; state: [B,H,Dk,Dv]. Returns (o [B,H,Dv], new_state)."""
+    f32 = lambda x: x.astype(jnp.float32)
+    r, k, v, g, state = f32(r), f32(k), f32(v), f32(g), f32(state)
+    decay = jnp.exp(g)
+    if g.ndim == 2:  # scalar per head
+        decay = decay[..., None]
+    kv = k[..., :, None] * v[..., None, :]
+    if inclusive:
+        state = decay[..., None] * state + kv
+        o = jnp.einsum("bhd,bhde->bhe", r, state)
+    else:
+        eff = state + (u[None, :, :, None] * kv if u is not None else 0.0)
+        o = jnp.einsum("bhd,bhde->bhe", r, eff)
+        state = decay[..., None] * state + kv
+    return o, state
+
+
+def reference_recurrence(r, k, v, g, *, u=None, inclusive=False,
+                         initial_state=None):
+    """O(T) sequential oracle for tests. Same shapes as chunked_gla."""
+    b, h, t, dk = r.shape
+    dv = v.shape[-1]
+    s = (jnp.zeros((b, h, dk, dv), jnp.float32) if initial_state is None
+         else initial_state.astype(jnp.float32))
+
+    def body(s, xs):
+        rt, kt, vt, gt = xs
+        o, s = gla_decode(rt, kt, vt, gt, s, u=u, inclusive=inclusive)
+        return s, o
+
+    xs = tuple(x.transpose(2, 0, 1, *range(3, x.ndim)) for x in (r, k, v, g))
+    s, outs = jax.lax.scan(body, s, xs)
+    return outs.transpose(1, 2, 0, 3), s

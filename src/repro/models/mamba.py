@@ -1,0 +1,114 @@
+"""SSM branch for Hymba blocks — Mamba-2/SSD-style selective state space,
+chunked for the MXU (DESIGN.md §2: GPU sequential selective-scan adapted to a
+chunked matmul recurrence; state size stays at the assigned 16).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gla import chunked_gla, gla_decode
+from repro.models.layers import dense_init, rms_norm
+
+CONV_WIDTH = 4
+
+
+def init_ssm(key, d_model: int, ssm_cfg, dtype):
+    di = ssm_cfg.expand * d_model
+    nh = di // ssm_cfg.head_dim
+    n = ssm_cfg.state_size
+    ks = jax.random.split(key, 4)
+    return {
+        # z (gate, di) | x (di) | B (n) | C (n) | dt (nh)
+        "in_proj": dense_init(ks[0], d_model, (d_model, 2 * di + 2 * n + nh), dtype),
+        "conv_w": (jax.random.normal(ks[1], (CONV_WIDTH, di + 2 * n), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di + 2 * n,), dtype),
+        "a_log": jnp.zeros((nh,), jnp.float32),       # A = -exp(a_log)
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[2], di, (di, d_model), dtype),
+    }
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: [B,S,C]; w: [W,C]. y[t] = sum_k w[k] * x[t - (W-1) + k] + b."""
+    out = jnp.zeros_like(x)
+    for k in range(CONV_WIDTH):
+        shift = CONV_WIDTH - 1 - k
+        xk = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1], :]
+        out = out + xk * w[k]
+    return jax.nn.silu(out + b)
+
+
+def _split_proj(p, proj, d_model, ssm_cfg):
+    di = ssm_cfg.expand * d_model
+    n = ssm_cfg.state_size
+    nh = di // ssm_cfg.head_dim
+    z = proj[..., :di]
+    xbc = proj[..., di: 2 * di + 2 * n]
+    dt_raw = proj[..., 2 * di + 2 * n:]
+    return z, xbc, dt_raw, di, n, nh
+
+
+def apply_ssm(p, x: jax.Array, *, d_model: int, ssm_cfg) -> jax.Array:
+    """Training/prefill SSM branch. x: [B,S,d] -> [B,S,d]."""
+    bsz, s, _ = x.shape
+    hd = ssm_cfg.head_dim
+    z, xbc, dt_raw, di, n, nh = _split_proj(p, x @ p["in_proj"], d_model, ssm_cfg)
+    xbc = _causal_depthwise_conv(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :di]
+    bmat = xbc[..., di: di + n]
+    cmat = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # [B,S,nh]
+    a = -jnp.exp(p["a_log"])                                          # [nh]
+    g = (dt * a).transpose(0, 2, 1)                                   # [B,nh,S]
+    # SSD: k=B (shared across heads), v = dt * x, q=C
+    k = jnp.broadcast_to(bmat[:, None, :, :], (bsz, nh, s, n))
+    q = jnp.broadcast_to(cmat[:, None, :, :], (bsz, nh, s, n))
+    v = (xs.reshape(bsz, s, nh, hd) * dt[..., None]).transpose(0, 2, 1, 3)
+    o, _ = chunked_gla(q, k, v, g, chunk=ssm_cfg.chunk, inclusive=True)
+    o = o + p["d_skip"][None, :, None, None] * xs.reshape(bsz, s, nh, hd).transpose(0, 2, 1, 3)
+    o = o.transpose(0, 2, 1, 3).reshape(bsz, s, di).astype(x.dtype)
+    o = rms_norm(o * jax.nn.silu(z), p["norm_scale"])
+    return o @ p["out_proj"]
+
+
+def init_ssm_cache(batch: int, d_model: int, ssm_cfg, dtype=jnp.float32):
+    di = ssm_cfg.expand * d_model
+    nh = di // ssm_cfg.head_dim
+    n = ssm_cfg.state_size
+    return {
+        "conv": jnp.zeros((batch, CONV_WIDTH - 1, di + 2 * n), dtype),
+        "state": jnp.zeros((batch, nh, n, ssm_cfg.head_dim), jnp.float32),
+    }
+
+
+def decode_ssm(p, x: jax.Array, cache, *, d_model: int, ssm_cfg) -> Tuple[jax.Array, dict]:
+    """One-token SSM step. x: [B,d]. Returns (out [B,d], new cache)."""
+    bsz = x.shape[0]
+    hd = ssm_cfg.head_dim
+    z, xbc, dt_raw, di, n, nh = _split_proj(p, x @ p["in_proj"], d_model, ssm_cfg)
+    # conv over [cache, current]
+    hist = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)  # [B,W,C]
+    y = jnp.einsum("bwc,wc->bc", hist.astype(jnp.float32),
+                   p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xbc_c = jax.nn.silu(y).astype(x.dtype)
+    new_conv = hist[:, 1:, :]
+    xs = xbc_c[..., :di]
+    bmat = xbc_c[..., di: di + n]
+    cmat = xbc_c[..., di + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # [B,nh]
+    a = -jnp.exp(p["a_log"])
+    g = dt * a                                                        # [B,nh]
+    k = jnp.broadcast_to(bmat[:, None, :], (bsz, nh, n))
+    q = jnp.broadcast_to(cmat[:, None, :], (bsz, nh, n))
+    v = xs.reshape(bsz, nh, hd) * dt[..., None]
+    o, state = gla_decode(q, k, v, g, cache["state"], inclusive=True)
+    o = o + p["d_skip"][None, :, None] * xs.reshape(bsz, nh, hd)
+    o = o.reshape(bsz, di).astype(x.dtype)
+    o = rms_norm(o * jax.nn.silu(z), p["norm_scale"])
+    return o @ p["out_proj"], {"conv": new_conv, "state": state}

@@ -1,0 +1,112 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3). Training uses the expanded
+form; decode uses the absorbed form with the compressed latent KV cache —
+the whole point of MLA for serving (cache = kv_lora_rank + rope_dim per token).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attend
+from repro.models.layers import apply_rope, dense_init, rms_norm
+
+NEG_INF = -1e9
+
+
+def init_mla(key, d_model: int, n_heads: int, m, dtype):
+    ks = jax.random.split(key, 7)
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": dense_init(ks[0], d_model, (d_model, m.q_lora_rank), dtype),
+        "q_norm": jnp.ones((m.q_lora_rank,), jnp.float32),
+        "wq_b": dense_init(ks[1], m.q_lora_rank, (m.q_lora_rank, n_heads * qk), dtype),
+        "wkv_a": dense_init(ks[2], d_model,
+                            (d_model, m.kv_lora_rank + m.qk_rope_head_dim), dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), jnp.float32),
+        "wk_b": dense_init(ks[3], m.kv_lora_rank,
+                           (m.kv_lora_rank, n_heads * m.qk_nope_head_dim), dtype),
+        "wv_b": dense_init(ks[4], m.kv_lora_rank,
+                           (m.kv_lora_rank, n_heads * m.v_head_dim), dtype),
+        "wo": dense_init(ks[5], n_heads * m.v_head_dim,
+                         (n_heads * m.v_head_dim, d_model), dtype),
+    }
+
+
+def _project_q(p, x, n_heads, m, theta, positions):
+    b = x.shape[0]
+    s = x.shape[1] if x.ndim == 3 else 1
+    dn, dr = m.qk_nope_head_dim, m.qk_rope_head_dim
+    cq = rms_norm(x @ p["wq_a"], p["q_norm"])
+    q = (cq @ p["wq_b"]).reshape(b, s, n_heads, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, theta)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(p, x, m, theta, positions):
+    ckv = x @ p["wkv_a"]
+    c, k_rope = ckv[..., : m.kv_lora_rank], ckv[..., m.kv_lora_rank:]
+    c = rms_norm(c, p["kv_norm"])
+    # shared single-head rope key
+    k_rope = apply_rope(k_rope[..., None, :], positions, theta)[..., 0, :]
+    return c, k_rope
+
+
+def apply_mla(p, x: jax.Array, *, n_heads: int, m, theta: float,
+              positions, chunk: int = 512) -> jax.Array:
+    """Training/prefill expanded MLA. x: [B,S,d]."""
+    b, s, _ = x.shape
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    q_nope, q_rope = _project_q(p, x, n_heads, m, theta, positions)
+    c, k_rope = _project_kv_latent(p, x, m, theta, positions)
+    k_nope = (c @ p["wk_b"]).reshape(b, s, n_heads, dn)
+    v = (c @ p["wv_b"]).reshape(b, s, n_heads, dv)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope[:, :, None, :], (b, s, n_heads, dr))],
+                        axis=-1)
+    # pad v up to qk dim for the shared attend() then slice back
+    out = attend(q, k, v, causal=True, chunk=chunk)
+    return out.reshape(b, s, n_heads * dv) @ p["wo"]
+
+
+def init_mla_cache(batch: int, seq: int, m, dtype=jnp.bfloat16):
+    return {
+        "c_kv": jnp.zeros((batch, seq, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, seq, m.qk_rope_head_dim), dtype),
+    }
+
+
+def decode_mla(p, x: jax.Array, cache, pos, *, n_heads: int, m,
+               theta: float) -> Tuple[jax.Array, dict]:
+    """Absorbed-form one-token decode against the latent cache. x: [B,d]."""
+    b, d = x.shape
+    dn, dr, dv, dc = (m.qk_nope_head_dim, m.qk_rope_head_dim,
+                      m.v_head_dim, m.kv_lora_rank)
+    posa = jnp.full((1,), pos)
+    q_nope, q_rope = _project_q(p, x[:, None, :], n_heads, m, theta, posa)
+    q_nope, q_rope = q_nope[:, 0], q_rope[:, 0]          # [B,H,dn], [B,H,dr]
+    c_new, k_rope_new = _project_kv_latent(p, x[:, None, :], m, theta, posa)
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), pos, axis=1)
+    # absorb W_UK into q: q_c [B,H,dc]
+    wk_b = p["wk_b"].reshape(dc, n_heads, dn)
+    q_c = jnp.einsum("bhn,chn->bhc", q_nope.astype(jnp.float32),
+                     wk_b.astype(jnp.float32))
+    scores = (jnp.einsum("bhc,bsc->bhs", q_c, c_kv.astype(jnp.float32))
+              + jnp.einsum("bhr,bsr->bhs", q_rope.astype(jnp.float32),
+                           k_rope.astype(jnp.float32)))
+    scores *= 1.0 / jnp.sqrt(jnp.asarray(dn + dr, jnp.float32))
+    s = c_kv.shape[1]
+    valid = jnp.arange(s) <= pos
+    scores = jnp.where(valid, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    ctx_c = jnp.einsum("bhs,bsc->bhc", w, c_kv.astype(jnp.float32))  # [B,H,dc]
+    wv_b = p["wv_b"].reshape(dc, n_heads, dv)
+    ctx = jnp.einsum("bhc,chv->bhv", ctx_c, wv_b.astype(jnp.float32))
+    out = ctx.reshape(b, n_heads * dv).astype(x.dtype) @ p["wo"]
+    return out, {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,0 +1,148 @@
+"""RWKV-6 (Finch) blocks: data-dependent-decay time-mix via chunked GLA,
+plus squared-ReLU channel-mix. Faithful to arXiv:2404.05892 including the
+5-way data-dependent token-shift (ddlerp) and the per-channel decay LoRA.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gla import chunked_gla, gla_decode
+from repro.models.layers import dense_init, group_norm_heads
+
+MAA_RANK = 32
+
+
+def init_time_mix(key, d_model: int, rwkv_cfg, dtype):
+    c = d_model
+    ks = jax.random.split(key, 10)
+    return {
+        "mu_x": jnp.zeros((c,), jnp.float32),
+        # static lerp weights for w,k,v,r,g
+        "mu": jnp.zeros((5, c), jnp.float32),
+        "maa_w1": dense_init(ks[0], c, (c, 5 * MAA_RANK), dtype),
+        "maa_w2": dense_init(ks[1], MAA_RANK, (5, MAA_RANK, c), dtype),
+        "decay_base": jnp.full((c,), -6.0, jnp.float32),   # omega
+        "decay_w1": dense_init(ks[2], c, (c, rwkv_cfg.decay_lora), dtype),
+        "decay_w2": dense_init(ks[3], rwkv_cfg.decay_lora, (rwkv_cfg.decay_lora, c), dtype),
+        "bonus_u": jnp.zeros((c,), jnp.float32),
+        "wr": dense_init(ks[4], c, (c, c), dtype),
+        "wk": dense_init(ks[5], c, (c, c), dtype),
+        "wv": dense_init(ks[6], c, (c, c), dtype),
+        "wg": dense_init(ks[7], c, (c, c), dtype),
+        "wo": dense_init(ks[8], c, (c, c), dtype),
+        "ln_scale": jnp.ones((c,), jnp.float32),
+        "ln_bias": jnp.zeros((c,), jnp.float32),
+    }
+
+
+def init_channel_mix(key, d_model: int, d_ff: int, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.zeros((d_model,), jnp.float32),
+        "mu_r": jnp.zeros((d_model,), jnp.float32),
+        "wk": dense_init(ks[0], d_model, (d_model, d_ff), dtype),
+        "wv": dense_init(ks[1], d_ff, (d_ff, d_model), dtype),
+        "wr": dense_init(ks[2], d_model, (d_model, d_model), dtype),
+    }
+
+
+def _shift(x: jax.Array) -> jax.Array:
+    """Token shift: x[t] -> x[t-1] (zeros at t=0). x: [B,S,C]."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1, :]
+
+
+def _ddlerp(p, x: jax.Array, sx: jax.Array):
+    """Data-dependent 5-way lerp -> (xw, xk, xv, xr, xg). sx = shift(x) - x."""
+    xxx = x + sx * p["mu_x"].astype(x.dtype)
+    mm = jnp.tanh(xxx @ p["maa_w1"])                                # [B,S,5R]
+    b, s, _ = mm.shape
+    mm = mm.reshape(b, s, 5, MAA_RANK)
+    mus = jnp.einsum("bsfr,frc->fbsc", mm, p["maa_w2"].astype(mm.dtype))
+    outs = []
+    for i in range(5):
+        w = (p["mu"][i].astype(x.dtype) + mus[i].astype(x.dtype))
+        outs.append(x + sx * w)
+    return outs  # w, k, v, r, g order
+
+
+def _decay(p, xw: jax.Array) -> jax.Array:
+    """Per-channel log-decay g <= 0: w = exp(-exp(omega + lora(xw)))."""
+    lora = jnp.tanh(xw @ p["decay_w1"]) @ p["decay_w2"]
+    return -jnp.exp(p["decay_base"] + lora.astype(jnp.float32))
+
+
+def _heads(x, n_heads, hs):
+    b = x.shape[0]
+    s = x.shape[1] if x.ndim == 3 else 1
+    return x.reshape(b, s, n_heads, hs).transpose(0, 2, 1, 3)
+
+
+def apply_time_mix(p, x: jax.Array, *, n_heads: int, rwkv_cfg,
+                   chunk=None) -> jax.Array:
+    """Train/prefill WKV. x: [B,S,C] -> [B,S,C]."""
+    b, s, c = x.shape
+    hs = rwkv_cfg.head_size
+    sx = _shift(x) - x
+    xw, xk, xv, xr, xg = _ddlerp(p, x, sx)
+    g_log = _decay(p, xw)                                           # [B,S,C]
+    r = _heads(xr @ p["wr"], n_heads, hs)
+    k = _heads(xk @ p["wk"], n_heads, hs)
+    v = _heads(xv @ p["wv"], n_heads, hs)
+    gate = jax.nn.silu(xg @ p["wg"])
+    g = _heads(g_log, n_heads, hs)
+    u = p["bonus_u"].reshape(n_heads, hs)
+    o, _ = chunked_gla(r, k, v, g, u=u, chunk=chunk or rwkv_cfg.chunk,
+                       inclusive=False)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, c).astype(x.dtype)
+    o = group_norm_heads(o, p["ln_scale"], p["ln_bias"], n_heads)
+    return (o * gate) @ p["wo"]
+
+
+def apply_channel_mix(p, x: jax.Array) -> jax.Array:
+    sx = _shift(x) - x
+    xk = x + sx * p["mu_k"].astype(x.dtype)
+    xr = x + sx * p["mu_r"].astype(x.dtype)
+    h = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid(xr @ p["wr"]) * (h @ p["wv"])
+
+
+def init_rwkv_cache(batch: int, d_model: int, n_heads: int, rwkv_cfg):
+    hs = rwkv_cfg.head_size
+    return {
+        "tm_x": jnp.zeros((batch, d_model), jnp.float32),   # prev token (time-mix)
+        "cm_x": jnp.zeros((batch, d_model), jnp.float32),   # prev token (channel-mix)
+        "wkv": jnp.zeros((batch, n_heads, hs, hs), jnp.float32),
+    }
+
+
+def decode_time_mix(p, x: jax.Array, cache, *, n_heads: int, rwkv_cfg
+                    ) -> Tuple[jax.Array, dict]:
+    """One-token recurrent WKV. x: [B,C]."""
+    b, c = x.shape
+    hs = rwkv_cfg.head_size
+    sx = cache["tm_x"].astype(x.dtype) - x
+    x3, sx3 = x[:, None, :], sx[:, None, :]
+    xw, xk, xv, xr, xg = _ddlerp(p, x3, sx3)
+    g_log = _decay(p, xw)[:, 0]                              # [B,C]
+    r = (xr[:, 0] @ p["wr"]).reshape(b, n_heads, hs)
+    k = (xk[:, 0] @ p["wk"]).reshape(b, n_heads, hs)
+    v = (xv[:, 0] @ p["wv"]).reshape(b, n_heads, hs)
+    gate = jax.nn.silu(xg[:, 0] @ p["wg"])
+    g = g_log.reshape(b, n_heads, hs)
+    u = p["bonus_u"].reshape(n_heads, hs)
+    o, wkv = gla_decode(r, k, v, g, cache["wkv"], u=u, inclusive=False)
+    o = o.reshape(b, c).astype(x.dtype)
+    o = group_norm_heads(o, p["ln_scale"], p["ln_bias"], n_heads)
+    out = (o * gate) @ p["wo"]
+    return out, {"tm_x": x.astype(jnp.float32), "cm_x": cache["cm_x"], "wkv": wkv}
+
+
+def decode_channel_mix(p, x: jax.Array, cache) -> Tuple[jax.Array, jax.Array]:
+    sx = cache["cm_x"].astype(x.dtype) - x
+    xk = x + sx * p["mu_k"].astype(x.dtype)
+    xr = x + sx * p["mu_r"].astype(x.dtype)
+    h = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid(xr @ p["wr"]) * (h @ p["wv"]), x.astype(jnp.float32)

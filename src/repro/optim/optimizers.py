@@ -1,0 +1,90 @@
+"""Optimizers (functional, pytree state): SGD, momentum-SGD, AdamW.
+
+State shards follow parameter PartitionSpecs (ZeRO-style for FSDP archs).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]  # (grads, state, params)
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params):
+        new = jax.tree.map(lambda p, g: (p - lr * g.astype(p.dtype)).astype(p.dtype),
+                           params, grads)
+        return new, state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, state, params):
+        new_m = jax.tree.map(lambda m, g: beta * m + g.astype(jnp.float32),
+                             state, grads)
+        new_p = jax.tree.map(lambda p, m: (p - lr * m.astype(p.dtype)).astype(p.dtype),
+                             params, new_m)
+        return new_p, new_m
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        bc1 = 1.0 - b1 ** t.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * gf
+            v2 = b2 * v + (1 - b2) * gf * gf
+            step = lr * (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+            if weight_decay:
+                step = step + lr * weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - step).astype(p.dtype), m2, v2
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "v": new_v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    flats = jax.tree.leaves(jax.tree.map(
+        lambda g: jnp.sum(g.astype(jnp.float32) ** 2), grads))
+    norm = jnp.sqrt(sum(flats))
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def make_optimizer(name: str, lr: float, weight_decay: float = 0.0) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr)
+    if name == "momentum":
+        return momentum(lr)
+    if name == "adamw":
+        return adamw(lr, weight_decay=weight_decay)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,6 @@
+from repro.roofline.analysis import (DCN_BW, HBM_BW, ICI_BW, PEAK_FLOPS,
+                                     CollectiveSummary, Roofline, analyze,
+                                     model_flops, parse_collectives)
+
+__all__ = ["analyze", "parse_collectives", "model_flops", "Roofline",
+           "CollectiveSummary", "PEAK_FLOPS", "HBM_BW", "ICI_BW", "DCN_BW"]

@@ -1,0 +1,243 @@
+"""Roofline terms from a compiled (dry-run) artifact.
+
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = sum over collective ops of wire_bytes_per_device / link_bw
+
+``cost_analysis()`` on an SPMD executable reports *per-device* flops/bytes
+(verified empirically). Collective bytes are NOT in cost_analysis: we parse
+the compiled HLO text, reconstruct each op's replica groups (including the
+``[G,N]<=[dims]T(perm)`` iota form), apply ring-algorithm wire factors, and
+classify intra-pod (ICI) vs cross-pod (DCN) by whether a group spans pods.
+
+Hardware model (TPU v5e-like, per the assignment):
+    197 TFLOP/s bf16 per chip; 819 GB/s HBM; ~50 GB/s/link ICI;
+    25 GB/s/chip cross-pod DCN (assumption, documented).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+DCN_BW = 25e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_RESULT_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * b
+
+
+def _parse_groups(line: str, n_devices: int) -> List[np.ndarray]:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        g, n = int(m.group(1)), int(m.group(2))
+        dims = [int(d) for d in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            perm = [int(p) for p in m.group(4).split(",")]
+            ids = ids.transpose(perm)
+        flat = ids.reshape(-1)
+        return [flat[i * n:(i + 1) * n] for i in range(g)]
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        groups = []
+        for part in re.findall(r"\{([^}]*)\}", m.group(1)):
+            ids = [int(x) for x in part.split(",") if x.strip()]
+            groups.append(np.array(ids))
+        return groups
+    return [np.arange(n_devices)]  # default: all devices
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    bytes_result: int
+    group_size: int
+    cross_pod: bool
+    wire_bytes_per_device: float
+
+
+@dataclass
+class CollectiveSummary:
+    ops: List[CollectiveOp] = field(default_factory=list)
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(o.wire_bytes_per_device for o in self.ops)
+
+    def seconds(self) -> float:
+        return sum(o.wire_bytes_per_device / (DCN_BW if o.cross_pod else ICI_BW)
+                   for o in self.ops)
+
+    def by_kind(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for o in self.ops:
+            out[o.kind] = out.get(o.kind, 0.0) + o.wire_bytes_per_device
+        return out
+
+
+def parse_collectives(hlo_text: str, n_devices: int,
+                      pod_size: Optional[int] = None) -> CollectiveSummary:
+    """pod_size: devices per pod (None -> single pod, nothing is cross-pod)."""
+    summary = CollectiveSummary()
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        kind = None
+        for k in _COLL_KINDS:
+            # match the op name after '=' (e.g. "f32[8] all-reduce(" or
+            # "all-reduce-start("), not metadata mentions
+            if re.search(rf"\s{k}(-start)?\(", stripped):
+                kind = k
+                break
+        if kind is None or stripped.startswith("ROOT %fusion"):
+            continue
+        if re.match(r"(ROOT )?%?\w+[\w.-]* = ", stripped) is None:
+            continue
+        lhs = stripped.split(" = ", 1)[1]
+        result_part = lhs.split(f" {kind}")[0]
+        rbytes = sum(_shape_bytes(d, s) for d, s in _RESULT_RE.findall(result_part))
+        if rbytes == 0:
+            continue
+        groups = _parse_groups(stripped, n_devices)
+        n = max(len(g) for g in groups)
+        if n <= 1:
+            continue
+        cross = False
+        if pod_size:
+            for g in groups:
+                if len(set(int(i) // pod_size for i in g)) > 1:
+                    cross = True
+                    break
+        # ring-algorithm wire bytes per device
+        if kind == "all-reduce":
+            wire = 2.0 * (n - 1) / n * rbytes
+        elif kind == "all-gather":
+            wire = (n - 1) / n * rbytes          # result = gathered size
+        elif kind == "reduce-scatter":
+            wire = (n - 1) * rbytes              # result = scattered shard
+        elif kind == "all-to-all":
+            wire = (n - 1) / n * rbytes
+        else:  # collective-permute
+            wire = float(rbytes)
+        summary.ops.append(CollectiveOp(kind, rbytes, n, cross, wire))
+    return summary
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    model_flops_global: float
+    hlo_total_flops_global: float
+    n_devices: int
+    coll_by_kind: Dict[str, float]
+    n_collectives: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def compute_fraction(self) -> float:
+        """Fraction of roofline: useful-compute time / bound step time."""
+        t = self.step_time_s
+        if t <= 0:
+            return 0.0
+        useful = self.model_flops_global / self.n_devices / PEAK_FLOPS
+        return useful / t
+
+    @property
+    def model_flops_ratio(self) -> float:
+        if self.hlo_total_flops_global <= 0:
+            return 0.0
+        return self.model_flops_global / self.hlo_total_flops_global
+
+    @property
+    def hbm_fraction(self) -> float:
+        """memory-term share of the bound step time (the roofline target for
+        decode steps, which are HBM-bound by construction)."""
+        t = self.step_time_s
+        return self.memory_s / t if t > 0 else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "step_time_s": self.step_time_s,
+            "compute_fraction": self.compute_fraction,
+            "hbm_fraction": self.hbm_fraction,
+            "model_flops_ratio": self.model_flops_ratio,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "wire_bytes_per_device": self.wire_bytes_per_device,
+            "coll_by_kind": self.coll_by_kind,
+            "n_collectives": self.n_collectives,
+        }
+
+
+def analyze(cost: dict, hlo_text: str, n_devices: int,
+            model_flops_global: float,
+            pod_size: Optional[int] = None) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    coll = parse_collectives(hlo_text, n_devices, pod_size)
+    return Roofline(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=nbytes / HBM_BW,
+        collective_s=coll.seconds(),
+        flops_per_device=flops,
+        bytes_per_device=nbytes,
+        wire_bytes_per_device=coll.total_wire_bytes,
+        model_flops_global=model_flops_global,
+        hlo_total_flops_global=flops * n_devices,
+        n_devices=n_devices,
+        coll_by_kind=coll.by_kind(),
+        n_collectives=len(coll.ops),
+    )
+
+
+def model_flops(cfg, shape_cfg) -> float:
+    """MODEL_FLOPS per the assignment: 6·N·D train (N_active for MoE);
+    2·N_active·B per decoded token; 2·N_active·B·S prefill."""
+    n_active = cfg.n_active_params()
+    if shape_cfg.kind == "train":
+        return 6.0 * n_active * shape_cfg.global_batch * shape_cfg.seq_len
+    if shape_cfg.kind == "prefill":
+        return 2.0 * n_active * shape_cfg.global_batch * shape_cfg.seq_len
+    return 2.0 * n_active * shape_cfg.global_batch   # decode: one token

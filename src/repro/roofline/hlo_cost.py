@@ -1,0 +1,232 @@
+"""HLO-text cost model with while-loop trip-count multipliers.
+
+XLA's ``cost_analysis()`` counts while-loop bodies ONCE regardless of trip
+count, which silently hides ~L× of a scanned transformer's cost. This module
+parses the compiled (per-device SPMD) HLO text instead:
+
+  * builds the computation call graph (ENTRY -> while bodies -> nested),
+  * reads each while op's ``known_trip_count`` backend config,
+  * counts dot FLOPs per computation (matmuls dominate TPU compute),
+  * counts bytes at fusion boundaries (operands+results of top-level ops,
+    NOT ops inside fused computations — a post-fusion traffic estimate),
+  * attributes collectives (with ring wire factors) per computation,
+
+then multiplies everything by the product of enclosing trip counts.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.roofline.analysis import (_DTYPE_BYTES, _parse_groups)
+
+_COMP_HEADER = re.compile(r"^(ENTRY )?%([\w.-]+)\s*\(.*\{\s*$")
+# "... = TYPE opname(operands..." — TYPE may be a tuple with layouts; the op
+# name is the first lowercase token directly followed by '('
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT )?%([\w.-]+) = (.*?) ([a-z][\w.-]*)\((.*)$")
+_SKIP_BYTES_OPS = {"while", "tuple", "get-tuple-element", "parameter",
+                   "bitcast", "after-all", "opt-barrier", "conditional"}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_TRIP_RE = re.compile(r'known_trip_count[\\":{\s]+n[\\":\s]+(\d+)')
+_CALLED_RE = re.compile(r"(?:body|condition|calls|to_apply)=%([\w.-]+)")
+_OPERAND_RE = re.compile(r"%([\w.-]+)")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        b = _DTYPE_BYTES.get(dt)
+        if b is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * b
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class CompCost:
+    dot_flops: float = 0.0
+    bytes: float = 0.0
+    colls: List[Tuple[str, int, int, bool]] = field(default_factory=list)
+    # (kind, result_bytes, group_size, cross_pod)
+    calls: List[Tuple[str, str, int]] = field(default_factory=list)
+    # (callee, kind: while|fusion|other, trip)
+
+
+@dataclass
+class HLOCost:
+    flops: float
+    bytes: float
+    collectives: List[Tuple[str, float, int, bool]]
+    # (kind, wire_bytes/dev, group_size, cross_pod)
+
+    def wire_bytes(self) -> float:
+        return sum(w for _, w, _, _ in self.collectives)
+
+    def by_kind(self):
+        ici, dcn = {}, {}
+        for k, w, _, cross in self.collectives:
+            d = dcn if cross else ici
+            d[k] = d.get(k, 0.0) + w
+        return ici, dcn
+
+
+def _split_computations(text: str) -> Tuple[Dict[str, List[str]], Optional[str]]:
+    comps: Dict[str, List[str]] = {}
+    entry = None
+    name = None
+    for line in text.splitlines():
+        m = _COMP_HEADER.match(line)
+        if m:
+            name = m.group(2)
+            comps[name] = []
+            if m.group(1):
+                entry = name
+        elif name is not None:
+            comps[name].append(line)
+    return comps, entry
+
+
+def _parse_computation(lines: List[str], n_devices: int,
+                       pod_size: Optional[int] = None) -> CompCost:
+    cost = CompCost()
+    shapes: Dict[str, str] = {}
+    for line in lines:
+        s = line.strip()
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op, rest = m.groups()
+        shapes[name] = type_str
+        if op.startswith("constant"):
+            continue
+        if op in _SKIP_BYTES_OPS:
+            if op == "while":
+                tm = _TRIP_RE.search(s)
+                trip = int(tm.group(1)) if tm else 1
+                for callee in _CALLED_RE.findall(s):
+                    cost.calls.append((callee, "while", trip))
+            continue
+        # ---- called computations
+        if op == "fusion":
+            cm = re.search(r"calls=%([\w.-]+)", s)
+            if cm:
+                cost.calls.append((cm.group(1), "fusion", 1))
+            # traffic at the fusion boundary
+            cost.bytes += _shape_bytes(type_str)
+            for ref in _OPERAND_RE.findall(rest.split(", calls=")[0]):
+                cost.bytes += _shape_bytes(shapes.get(ref, ""))
+            continue
+        # ---- collectives
+        matched_coll = None
+        for k in _COLL_KINDS:
+            if op == k or op == k + "-start":
+                matched_coll = k
+                break
+        if matched_coll:
+            groups = _parse_groups(s, n_devices)
+            n = max(len(g) for g in groups) if groups else 1
+            cross = False
+            if pod_size:
+                for g in groups:
+                    if len(set(int(i) // pod_size for i in g)) > 1:
+                        cross = True
+                        break
+            rbytes = _shape_bytes(type_str)
+            if n > 1 and rbytes:
+                cost.colls.append((matched_coll, rbytes, n, cross))
+            cost.bytes += rbytes * 2  # read + write
+            continue
+        if op.endswith("-done"):
+            continue
+        # ---- dot flops
+        if op == "dot":
+            out_elems = 1
+            for d in _shape_dims(type_str):
+                out_elems *= d
+            cdm = _CDIMS_RE.search(s)
+            k_elems = 1
+            if cdm:
+                refs = _OPERAND_RE.findall(rest)
+                if refs:
+                    lhs_dims = _shape_dims(shapes.get(refs[0], ""))
+                    for ci in cdm.group(1).split(","):
+                        if ci and int(ci) < len(lhs_dims):
+                            k_elems *= lhs_dims[int(ci)]
+            cost.dot_flops += 2.0 * out_elems * k_elems
+        # ---- generic op traffic (operands + result)
+        cost.bytes += _shape_bytes(type_str)
+        for ref in _OPERAND_RE.findall(rest):
+            if ref in shapes:
+                cost.bytes += _shape_bytes(shapes[ref])
+    return cost
+
+
+def analyze_hlo(text: str, n_devices: int,
+                pod_size: Optional[int] = None) -> HLOCost:
+    comps, entry = _split_computations(text)
+    parsed = {name: _parse_computation(lines, n_devices, pod_size)
+              for name, lines in comps.items()}
+    if entry is None:
+        entry = next((n for n in comps if n.startswith("main")), None)
+    if entry is None:
+        return HLOCost(0.0, 0.0, [])
+
+    flops = 0.0
+    nbytes = 0.0
+    colls: List[Tuple[str, float, int, bool]] = []
+
+    def visit(name: str, mult: float, seen: tuple):
+        nonlocal flops, nbytes
+        if name not in parsed or name in seen:
+            return
+        c = parsed[name]
+        flops += mult * c.dot_flops
+        nbytes += mult * c.bytes
+        for kind, rbytes, n, cross in c.colls:
+            if kind == "all-reduce":
+                wire = 2.0 * (n - 1) / n * rbytes
+            elif kind == "all-gather":
+                wire = (n - 1) / n * rbytes
+            elif kind == "reduce-scatter":
+                wire = (n - 1.0) * rbytes
+            elif kind == "all-to-all":
+                wire = (n - 1) / n * rbytes
+            else:
+                wire = float(rbytes)
+            colls.append((kind, mult * wire, n, cross))
+        for callee, kind, trip in c.calls:
+            if kind == "while":
+                visit(callee, mult * trip, seen + (name,))
+            elif kind == "fusion":
+                # fused dots still execute: count flops only (bytes at the
+                # boundary were counted at the call site)
+                fc = parsed.get(callee)
+                if fc is not None:
+                    flops += mult * fc.dot_flops
+                    for fcallee, fkind, ftrip in fc.calls:
+                        if fkind == "while":
+                            visit(fcallee, mult * ftrip, seen + (name,))
+            else:
+                visit(callee, mult, seen + (name,))
+
+    visit(entry, 1.0, ())
+    return HLOCost(flops, nbytes, colls)

@@ -1,0 +1,100 @@
+"""BCRS scheduling tests (paper Alg. 2 + Eq. 6)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bcrs
+from repro.core.cost_model import round_times, sample_links, uncompressed_round
+
+
+def _links(n=8, seed=0):
+    return sample_links(n, np.random.default_rng(seed))
+
+
+class TestSchedule:
+    def test_equalizes_times(self):
+        """The whole point: post-schedule comm times are ~equal across
+        clients (up to the cr_max clip)."""
+        links = _links()
+        v = 4 * 10_000_000  # 10M params fp32
+        crs = bcrs.schedule_crs(links, v, cr_star=0.01)
+        times = [bcrs.comm_time(v, l, c) for l, c in zip(links, crs)]
+        unclipped = [t for t, c in zip(times, crs) if c < 1.0]
+        assert max(unclipped) - min(unclipped) < 1e-9 * max(unclipped) + 1e-6
+
+    def test_slowest_keeps_cr_star(self):
+        links = _links()
+        v = 4 * 10_000_000
+        cr_star = 0.02
+        crs = bcrs.schedule_crs(links, v, cr_star)
+        t0 = [bcrs.comm_time(v, l, cr_star) for l in links]
+        slowest = int(np.argmax(t0))
+        assert crs[slowest] == pytest.approx(cr_star, rel=1e-6)
+
+    def test_faster_clients_get_higher_cr(self):
+        links = [bcrs.ClientLink(2e6, 0.1), bcrs.ClientLink(1e6, 0.1),
+                 bcrs.ClientLink(0.5e6, 0.1)]
+        crs = bcrs.schedule_crs(links, 4e6, 0.05)
+        assert crs[0] > crs[1] > crs[2]
+
+    @given(st.integers(2, 30), st.floats(0.001, 0.2), st.integers(0, 1000))
+    @settings(max_examples=30, deadline=None)
+    def test_property_no_slower_than_uniform(self, n, cr_star, seed):
+        """BCRS never makes any client slower than the uniform-CR* straggler
+        (Fig. 1: it reuses idle time, never adds to it)."""
+        links = _links(n, seed)
+        v = 4e6
+        crs = bcrs.schedule_crs(links, v, cr_star)
+        t_bench = max(bcrs.comm_time(v, l, cr_star) for l in links)
+        times = [bcrs.comm_time(v, l, c) for l, c in zip(links, crs)]
+        assert max(times) <= t_bench * (1 + 1e-9)
+
+    @given(st.integers(2, 30), st.integers(0, 1000))
+    @settings(max_examples=30, deadline=None)
+    def test_property_crs_at_least_cr_star(self, n, seed):
+        links = _links(n, seed)
+        crs = bcrs.schedule_crs(links, 4e6, 0.01)
+        assert (crs >= 0.01 - 1e-12).all()
+
+
+class TestCoefficients:
+    def test_cap_at_alpha(self):
+        f = np.array([0.5, 0.3, 0.2])
+        crs = np.array([0.1, 0.1, 0.1])
+        p = bcrs.client_coefficients(f, crs, alpha=0.3)
+        assert (p <= 0.3 + 1e-12).all()
+
+    def test_small_data_fraction_downweighted(self):
+        """Clients whose data fraction is below their normalized CR get
+        p' < alpha (Eq. 6 denominator switches to Norm(CR))."""
+        f = np.array([0.05, 0.95])
+        crs = np.array([0.5, 0.5])   # Norm -> [0.5, 0.5]
+        p = bcrs.client_coefficients(f, crs, alpha=1.0)
+        assert p[0] == pytest.approx(0.1)
+        assert p[1] == pytest.approx(1.0)
+
+
+class TestTimeAccounting:
+    def test_bcrs_round_no_slower_than_topk(self):
+        links = _links(12, seed=3)
+        v = 4e6
+        cr = 0.05
+        topk_rt = round_times(links, v, [cr] * 12)
+        crs = bcrs.schedule_crs(links, v, cr)
+        bcrs_rt = round_times(links, v, crs)
+        assert bcrs_rt.actual <= topk_rt.actual * (1 + 1e-9)
+
+    def test_uncompressed_much_slower(self):
+        links = _links(12, seed=4)
+        v = 4e6
+        dense = uncompressed_round(links, v)
+        crs = bcrs.schedule_crs(links, v, 0.01)
+        compressed = round_times(links, v, crs)
+        assert dense.actual > 10 * compressed.actual
+
+    def test_pod_schedule(self):
+        crs = bcrs.pod_link_schedule([100.0, 50.0, 25.0], v_bytes=1e9,
+                                     cr_star=0.01)
+        assert crs[0] > crs[1] > crs[2]
+        assert crs[2] == pytest.approx(0.01, rel=1e-6)

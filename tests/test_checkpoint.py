@@ -1,0 +1,61 @@
+"""Checkpoint: atomicity, integrity, retention, restart, bf16 round-trip."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+
+
+def _tree(key=0):
+    k = jax.random.PRNGKey(key)
+    return {"a": jax.random.normal(k, (32, 16)),
+            "nested": {"b": jnp.arange(10, dtype=jnp.int32),
+                       "c": jax.random.normal(k, (8,)).astype(jnp.bfloat16)},
+            "scalar": jnp.float32(3.5)}
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        t = _tree()
+        ckpt.save(str(tmp_path), 5, t)
+        restored, step, extra = ckpt.restore(str(tmp_path), t)
+        assert step == 5
+        for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+    def test_latest_and_retention(self, tmp_path):
+        t = _tree()
+        for s in [1, 2, 3, 4, 5]:
+            ckpt.save(str(tmp_path), s, t, keep=3)
+        assert ckpt.list_steps(str(tmp_path)) == [3, 4, 5]
+        assert ckpt.latest_step(str(tmp_path)) == 5
+
+    def test_extra_metadata(self, tmp_path):
+        ckpt.save(str(tmp_path), 1, _tree(), extra={"arch": "x", "lr": 0.1})
+        _, _, extra = ckpt.restore(str(tmp_path), _tree())
+        assert extra == {"arch": "x", "lr": 0.1}
+
+    def test_corruption_detected(self, tmp_path):
+        path = ckpt.save(str(tmp_path), 1, _tree())
+        raw = bytearray(open(path, "rb").read())
+        raw[len(raw) // 2] ^= 0xFF
+        open(path, "wb").write(bytes(raw))
+        with pytest.raises(Exception):
+            ckpt.restore(str(tmp_path), _tree())
+
+    def test_no_tmp_left_behind(self, tmp_path):
+        ckpt.save(str(tmp_path), 1, _tree())
+        assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+
+    def test_restore_specific_step(self, tmp_path):
+        ckpt.save(str(tmp_path), 1, _tree(0), keep=5)
+        ckpt.save(str(tmp_path), 2, _tree(1), keep=5)
+        r1, step, _ = ckpt.restore(str(tmp_path), _tree(), step=1)
+        assert step == 1
+        np.testing.assert_array_equal(np.asarray(r1["a"]),
+                                      np.asarray(_tree(0)["a"]))

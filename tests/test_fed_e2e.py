@@ -1,0 +1,114 @@
+"""End-to-end FL behaviour tests: convergence, paper-claim directionality,
+fault tolerance, mesh-parallel round equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.aggregation import AggregationConfig
+from repro.fed.mesh_round import make_fl_round_step
+from repro.fed.simulation import FLSimConfig, run_fl
+from repro.ft import FailureInjector
+from repro.models import Model
+
+FAST = dict(rounds=12, n_train=2000, n_test=600, eval_every=2, seed=3)
+
+
+class TestSimulation:
+    def test_fedavg_learns(self):
+        res = run_fl(FLSimConfig(**FAST),
+                     AggregationConfig(strategy="fedavg"))
+        assert res.final_accuracy > 0.5
+
+    def test_topk_learns_slower_at_high_compression(self):
+        dense = run_fl(FLSimConfig(**FAST),
+                       AggregationConfig(strategy="fedavg"))
+        topk = run_fl(FLSimConfig(**FAST),
+                      AggregationConfig(strategy="topk", cr=0.01))
+        assert topk.final_accuracy <= dense.final_accuracy + 0.02
+
+    def test_bcrs_not_worse_than_topk(self):
+        """Paper claim: BCRS >= TopK at the same CR* (more info, same time)."""
+        topk = run_fl(FLSimConfig(**FAST),
+                      AggregationConfig(strategy="topk", cr=0.01))
+        bcrs = run_fl(FLSimConfig(**FAST),
+                      AggregationConfig(strategy="bcrs", cr=0.01, alpha=1.0))
+        assert bcrs.final_accuracy >= topk.final_accuracy - 0.03
+
+    def test_bcrs_comm_time_equals_topk_benchmark(self):
+        topk = run_fl(FLSimConfig(**FAST),
+                      AggregationConfig(strategy="topk", cr=0.01))
+        bcrs = run_fl(FLSimConfig(**FAST),
+                      AggregationConfig(strategy="bcrs", cr=0.01))
+        assert bcrs.times.actual == pytest.approx(topk.times.actual, rel=1e-6)
+
+    def test_fedavg_much_slower_comm(self):
+        dense = run_fl(FLSimConfig(**FAST),
+                       AggregationConfig(strategy="fedavg"))
+        comp = run_fl(FLSimConfig(**FAST),
+                      AggregationConfig(strategy="topk", cr=0.01))
+        assert dense.times.actual > 5 * comp.times.actual
+
+    def test_survives_client_failures(self):
+        inj = FailureInjector(p_fail=0.3, seed=1)
+        res = run_fl(FLSimConfig(**FAST),
+                     AggregationConfig(strategy="bcrs", cr=0.05),
+                     failure=inj)
+        assert res.final_accuracy > 0.35  # still learns under 30% dropout
+
+
+class TestMeshRound:
+    def _setup(self):
+        cfg = get_config("stablelm-1.6b").reduced()
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        c, steps, bs, s = 4, 2, 2, 32
+        rng = np.random.default_rng(0)
+        toks = rng.integers(0, cfg.vocab_size, (c, steps, bs, s + 1))
+        batches = {"tokens": jnp.asarray(toks[..., :-1], jnp.int32),
+                   "labels": jnp.asarray(toks[..., 1:], jnp.int32)}
+        return cfg, model, params, batches, c
+
+    def test_round_changes_params_and_loss_finite(self):
+        cfg, model, params, batches, c = self._setup()
+        fn = jax.jit(make_fl_round_step(model, lr_local=1e-2))
+        coeffs = jnp.full((c,), 1.0 / c)
+        crs = jnp.full((c,), 0.1)
+        new_params, loss = fn(params, batches, coeffs, crs)
+        assert np.isfinite(float(loss))
+        diffs = jax.tree.leaves(jax.tree.map(
+            lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                               - b.astype(jnp.float32)))),
+            params, new_params))
+        assert max(diffs) > 0
+
+    def test_cr_one_uncompressed_matches_dense_round(self):
+        """CR=1 keeps every parameter -> compressed round == dense round."""
+        cfg, model, params, batches, c = self._setup()
+        comp_fn = jax.jit(make_fl_round_step(model, lr_local=1e-2,
+                                             compress=True, gamma=1.0))
+        dense_fn = jax.jit(make_fl_round_step(model, lr_local=1e-2,
+                                              compress=False))
+        coeffs = jnp.full((c,), 1.0 / c)
+        p1, _ = comp_fn(params, batches, coeffs, jnp.ones((c,)))
+        p2, _ = dense_fn(params, batches, coeffs, jnp.ones((c,)))
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=5e-4, atol=5e-5)
+
+    def test_higher_cr_closer_to_dense(self):
+        cfg, model, params, batches, c = self._setup()
+        fn = jax.jit(make_fl_round_step(model, lr_local=1e-2, gamma=1.0))
+        dense_fn = jax.jit(make_fl_round_step(model, lr_local=1e-2,
+                                              compress=False))
+        coeffs = jnp.full((c,), 1.0 / c)
+        pd, _ = dense_fn(params, batches, coeffs, jnp.ones((c,)))
+        flat = lambda t: jnp.concatenate(
+            [l.reshape(-1).astype(jnp.float32) for l in jax.tree.leaves(t)])
+        errs = []
+        for cr in [0.01, 0.3]:
+            pc, _ = fn(params, batches, coeffs, jnp.full((c,), cr))
+            errs.append(float(jnp.linalg.norm(flat(pc) - flat(pd))))
+        assert errs[1] < errs[0]

@@ -1,0 +1,83 @@
+"""Fault tolerance: straggler policy, failure injection, elastic pool,
+checkpoint-restart of the training drivers."""
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.ft import (ElasticPool, FailureInjector, StragglerPolicy, arrivals,
+                      over_select, renormalize_coefficients)
+
+
+class TestStraggler:
+    def test_over_select(self):
+        assert over_select(8, StragglerPolicy(over_selection=0.25)) == 10
+
+    def test_arrivals_picks_fastest(self):
+        times = [5.0, 1.0, 2.0, 9.0, 3.0]
+        chosen, dur = arrivals(times, 3, StragglerPolicy())
+        assert chosen.tolist() == [False, True, True, False, True]
+        assert dur == 3.0
+
+    def test_renormalize_preserves_total(self):
+        c = np.array([0.4, 0.3, 0.2, 0.1])
+        arrived = np.array([True, False, True, True])
+        out = renormalize_coefficients(c, arrived)
+        assert out[1] == 0
+        assert out.sum() == pytest.approx(c.sum())
+
+
+class TestFailures:
+    def test_injector_deterministic(self):
+        inj = FailureInjector(p_fail=0.5, seed=7)
+        a = inj.survivors(3, 10)
+        b = inj.survivors(3, 10)
+        np.testing.assert_array_equal(a, b)
+        assert a.any()  # never kills everyone
+
+    def test_scheduled_failure(self):
+        inj = FailureInjector(scheduled=[(2, 5)])
+        alive = inj.survivors(2, 10)
+        assert not alive[5]
+        assert inj.survivors(3, 10)[5]
+
+    def test_elastic_pool(self):
+        pool = ElasticPool(n_registered=10)
+        pool.scale(+6)
+        sel = pool.sample(0.5, np.random.default_rng(0))
+        assert len(sel) == 8 and sel.max() < 16
+        pool.scale(-12)
+        assert pool.n_registered == 4
+
+
+@pytest.mark.slow
+class TestRestartDrivers:
+    def test_train_resume(self, tmp_path):
+        """Kill-and-restart: the driver resumes from the checkpoint."""
+        cmd = [sys.executable, "-m", "repro.launch.train", "--arch",
+               "stablelm-1.6b", "--reduced", "--batch", "2", "--seq", "32",
+               "--checkpoint-dir", str(tmp_path), "--checkpoint-every", "5"]
+        r1 = subprocess.run(cmd + ["--steps", "5"], capture_output=True,
+                            text=True, env=_env())
+        assert r1.returncode == 0, r1.stderr[-2000:]
+        r2 = subprocess.run(cmd + ["--steps", "10"], capture_output=True,
+                            text=True, env=_env())
+        assert r2.returncode == 0, r2.stderr[-2000:]
+        assert "resumed from step 5" in r2.stdout
+
+    def test_fl_train_runs_with_failures(self, tmp_path):
+        cmd = [sys.executable, "-m", "repro.launch.fl_train", "--arch",
+               "stablelm-1.6b", "--reduced", "--rounds", "3", "--clients",
+               "4", "--batch", "2", "--seq", "32", "--fail-prob", "0.3",
+               "--checkpoint-dir", str(tmp_path)]
+        r = subprocess.run(cmd, capture_output=True, text=True, env=_env())
+        assert r.returncode == 0, r.stderr[-2000:]
+        assert "done" in r.stdout
+
+
+def _env():
+    import os
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    return env

@@ -1,0 +1,136 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.block_topk import block_topk_pallas
+from repro.kernels.ef_update import ef_update_pallas
+from repro.kernels.overlap_combine import overlap_combine_pallas
+
+SHAPES_2D = [(8, 128), (8, 1024), (16, 8192), (32, 512), (8, 2048)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+class TestBlockTopK:
+    @pytest.mark.parametrize("shape", SHAPES_2D)
+    @pytest.mark.parametrize("dtype", DTYPES)
+    def test_vs_ref(self, shape, dtype):
+        x = jax.random.normal(jax.random.PRNGKey(0), shape).astype(dtype)
+        k = max(1, shape[1] // 10)
+        kv, km = block_topk_pallas(x, k, interpret=True)
+        rv, rm = ref.block_topk_ref(x, k)
+        np.testing.assert_array_equal(np.asarray(km), np.asarray(rm))
+        np.testing.assert_allclose(np.asarray(kv, np.float32),
+                                   np.asarray(rv, np.float32), rtol=1e-6)
+
+    @pytest.mark.parametrize("k", [1, 7, 128, 1024])
+    def test_k_sweep(self, k):
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, 1024))
+        kv, km = block_topk_pallas(x, k, interpret=True)
+        assert (np.asarray(km).sum(axis=1) == k).all()
+
+    def test_flat_wrapper_matches_core(self):
+        u = jax.random.normal(jax.random.PRNGKey(2), (100_000,))
+        from repro.core.compression import block_topk_compress
+        a = block_topk_compress(u, 0.1, block=8192, use_kernel=False)
+        b = ops.block_topk(u, 0.1, block=8192)
+        np.testing.assert_allclose(np.asarray(a.values), np.asarray(b.values),
+                                   rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(a.mask), np.asarray(b.mask))
+
+
+class TestOverlapCombine:
+    @pytest.mark.parametrize("k_clients", [2, 5, 10, 16])
+    @pytest.mark.parametrize("n", [1024, 4096, 10240])
+    def test_vs_ref(self, k_clients, n):
+        key = jax.random.PRNGKey(k_clients * 1000 + n)
+        vals = jax.random.normal(key, (k_clients, n))
+        vals = vals * (jax.random.uniform(jax.random.PRNGKey(1), (k_clients, n)) < 0.1)
+        masks = (vals != 0)
+        coeffs = jax.random.uniform(jax.random.PRNGKey(2), (k_clients,))
+        out = overlap_combine_pallas(vals, masks, coeffs, 5.0, 1,
+                                     interpret=True)
+        r = ref.overlap_combine_ref(vals, masks, coeffs, 5.0, 1)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(r), rtol=1e-5,
+                                   atol=1e-6)
+
+    @pytest.mark.parametrize("gamma,d", [(1.0, 1), (3.0, 2), (10.0, 1)])
+    def test_gamma_d_sweep(self, gamma, d):
+        vals = jax.random.normal(jax.random.PRNGKey(3), (6, 2048))
+        vals = vals * (jnp.abs(vals) > 1.0)
+        masks = vals != 0
+        coeffs = jnp.full((6,), 1 / 6)
+        out = ops.overlap_combine(vals, masks, coeffs, gamma, d)
+        r = ref.overlap_combine_ref(vals, masks, coeffs, gamma, d)[0]
+        np.testing.assert_allclose(np.asarray(out), np.asarray(r), rtol=1e-5,
+                                   atol=1e-6)
+
+
+class TestEFUpdate:
+    @pytest.mark.parametrize("shape", SHAPES_2D)
+    def test_vs_ref(self, shape):
+        g = jax.random.normal(jax.random.PRNGKey(4), shape)
+        e = jax.random.normal(jax.random.PRNGKey(5), shape)
+        k = max(1, shape[1] // 20)
+        ks, ke = ef_update_pallas(g, e, k, interpret=True)
+        rs, re = ref.ef_update_ref(g, e, k)
+        np.testing.assert_allclose(np.asarray(ks), np.asarray(rs), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(ke), np.asarray(re), rtol=1e-6)
+
+    def test_conservation(self):
+        g = jax.random.normal(jax.random.PRNGKey(6), (30_000,))
+        e = jax.random.normal(jax.random.PRNGKey(7), (30_000,))
+        s, ne = ops.ef_topk_update(g, e, 0.05, block=4096)
+        np.testing.assert_allclose(np.asarray(s + ne), np.asarray(g + e),
+                                   rtol=1e-5)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("shape", [(2, 3, 128, 128, 64),
+                                       (1, 2, 256, 256, 32),
+                                       (1, 2, 100, 100, 64),
+                                       (1, 1, 128, 384, 64)])
+    @pytest.mark.parametrize("dtype", DTYPES)
+    def test_vs_ref(self, shape, dtype):
+        b, h, sq, sk, d = shape
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (b, sq, h, d)).astype(dtype)
+        k = jax.random.normal(ks[1], (b, sk, h, d)).astype(dtype)
+        v = jax.random.normal(ks[2], (b, sk, h, d)).astype(dtype)
+        out = ops.flash_attention(q, k, v, causal=True)
+        qt = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+        kt = k.transpose(0, 2, 1, 3).reshape(b * h, sk, d)
+        vt = v.transpose(0, 2, 1, 3).reshape(b * h, sk, d)
+        r = ref.flash_attention_ref(qt, kt, vt, True).reshape(
+            b, h, sq, d).transpose(0, 2, 1, 3)
+        tol = 2e-6 if dtype == jnp.float32 else 2e-3
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(r, np.float32), atol=tol,
+                                   rtol=tol)
+
+    def test_matches_model_attend(self):
+        """Flash kernel == the model's chunked jnp attention path."""
+        from repro.models.attention import attend
+        b, s, h, d = 1, 128, 2, 64
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = jax.random.normal(ks[0], (b, s, h, d))
+        k = jax.random.normal(ks[1], (b, s, h, d))
+        v = jax.random.normal(ks[2], (b, s, h, d))
+        a = attend(q, k, v, causal=True, chunk=64)
+        f = ops.flash_attention(q, k, v, causal=True, blk_q=64, blk_k=64)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(f), atol=1e-5,
+                                   rtol=1e-5)
+
+    @pytest.mark.parametrize("blocks", [(64, 64), (128, 64), (64, 128)])
+    def test_block_shape_invariance(self, blocks):
+        bq, bk = blocks
+        ks = jax.random.split(jax.random.PRNGKey(2), 3)
+        q = jax.random.normal(ks[0], (1, 256, 2, 32))
+        k = jax.random.normal(ks[1], (1, 256, 2, 32))
+        v = jax.random.normal(ks[2], (1, 256, 2, 32))
+        a = ops.flash_attention(q, k, v, blk_q=bq, blk_k=bk)
+        b_ = ops.flash_attention(q, k, v, blk_q=128, blk_k=128)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-5,
+                                   rtol=1e-5)

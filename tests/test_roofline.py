@@ -1,0 +1,103 @@
+"""HLO cost model + roofline unit tests (the §Roofline measurement layer)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline import analysis
+from repro.roofline.hlo_cost import analyze_hlo
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile()
+
+
+class TestHLOCost:
+    def test_matmul_exact(self):
+        co = _compile(lambda a, b: a @ b,
+                      jax.ShapeDtypeStruct((128, 128), jnp.float32),
+                      jax.ShapeDtypeStruct((128, 128), jnp.float32))
+        c = analyze_hlo(co.as_text(), 1)
+        assert c.flops == 2 * 128 ** 3
+
+    def test_scan_trip_count(self):
+        def f(x, w):
+            def body(c, _):
+                return jnp.tanh(c @ w), None
+            out, _ = jax.lax.scan(body, x, None, length=7)
+            return out
+        co = _compile(f, jax.ShapeDtypeStruct((128, 128), jnp.float32),
+                      jax.ShapeDtypeStruct((128, 128), jnp.float32))
+        c = analyze_hlo(co.as_text(), 1)
+        assert c.flops == 7 * 2 * 128 ** 3
+
+    def test_nested_scan(self):
+        def f(x, w):
+            def inner(c, _):
+                return c @ w, None
+            def outer(c, _):
+                c2, _ = jax.lax.scan(inner, c, None, length=5)
+                return c2, None
+            out, _ = jax.lax.scan(outer, x, None, length=3)
+            return out
+        co = _compile(f, jax.ShapeDtypeStruct((128, 128), jnp.float32),
+                      jax.ShapeDtypeStruct((128, 128), jnp.float32))
+        c = analyze_hlo(co.as_text(), 1)
+        assert c.flops == 15 * 2 * 128 ** 3
+
+    def test_bytes_reasonable(self):
+        co = _compile(lambda a, b: jnp.tanh(a @ b),
+                      jax.ShapeDtypeStruct((256, 256), jnp.float32),
+                      jax.ShapeDtypeStruct((256, 256), jnp.float32))
+        c = analyze_hlo(co.as_text(), 1)
+        ideal = 3 * 256 * 256 * 4
+        assert ideal <= c.bytes <= 4 * ideal
+
+
+class TestCollectiveParsing:
+    def test_iota_groups(self):
+        groups = analysis._parse_groups(
+            "replica_groups=[4,16]<=[64]", 64)
+        assert len(groups) == 4 and all(len(g) == 16 for g in groups)
+        assert groups[0].tolist() == list(range(16))
+
+    def test_transposed_iota_groups(self):
+        groups = analysis._parse_groups(
+            "replica_groups=[16,4]<=[4,16]T(1,0)", 64)
+        assert len(groups) == 16 and all(len(g) == 4 for g in groups)
+        # transpose: group 0 = devices 0,16,32,48
+        assert groups[0].tolist() == [0, 16, 32, 48]
+
+    def test_wire_factors(self):
+        text = ("ENTRY %main (p: f32[64]) -> f32[64] {\n"
+                "  %p = f32[64]{0} parameter(0)\n"
+                "  ROOT %ar = f32[64]{0} all-reduce(%p), "
+                "replica_groups=[1,4]<=[4], to_apply=%add\n}\n")
+        s = analysis.parse_collectives(text, 4)
+        assert len(s.ops) == 1
+        assert s.ops[0].wire_bytes_per_device == pytest.approx(
+            2 * 3 / 4 * 64 * 4)
+
+    def test_cross_pod_classification(self):
+        text = ("ENTRY %main (p: f32[64]) -> f32[64] {\n"
+                "  %p = f32[64]{0} parameter(0)\n"
+                "  ROOT %ar = f32[64]{0} all-reduce(%p), "
+                "replica_groups=[1,512]<=[512], to_apply=%add\n}\n")
+        s = analysis.parse_collectives(text, 512, pod_size=256)
+        assert s.ops[0].cross_pod
+
+
+class TestModelFlops:
+    def test_train_vs_decode(self):
+        from repro.configs import SHAPES, get_config
+        cfg = get_config("yi-9b")
+        tr = analysis.model_flops(cfg, SHAPES["train_4k"])
+        de = analysis.model_flops(cfg, SHAPES["decode_32k"])
+        assert tr == pytest.approx(6 * cfg.n_params() * 256 * 4096, rel=1e-6)
+        assert de == pytest.approx(2 * cfg.n_params() * 128, rel=1e-6)
+
+    def test_moe_uses_active(self):
+        from repro.configs import SHAPES, get_config
+        cfg = get_config("deepseek-v3-671b")
+        tr = analysis.model_flops(cfg, SHAPES["train_4k"])
+        assert tr < 6 * cfg.n_params() * 256 * 4096 * 0.2  # active << total
