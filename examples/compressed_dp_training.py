@@ -12,7 +12,8 @@ from repro.configs import get_config
 from repro.core.bcrs import pod_link_schedule
 from repro.core.compression import k_for_ratio
 from repro.data import synthetic_lm_tokens
-from repro.dist.grad_sync import make_compressed_train_step, make_train_step
+from repro.dist.grad_sync import (init_compressed_state,
+                                  make_compressed_train_step, make_train_step)
 from repro.models import Model
 from repro.optim import make_optimizer
 
@@ -52,7 +53,7 @@ comp_step = jax.jit(make_compressed_train_step(
     min_leaf_size=4096))
 pod_crs = jnp.asarray(crs, jnp.float32)
 pod_coeffs = jnp.full((N_PODS,), 1.0 / N_PODS, jnp.float32)
-p, s = params0, opt.init(params0)
+p, s = params0, init_compressed_state(opt, params0, n_pods=N_PODS)
 for i in range(STEPS):
     p, s, m = comp_step(p, s, data(i), pod_crs, pod_coeffs)
 loss_comp = float(m["loss"])

@@ -1,0 +1,6 @@
+from repro.dist import grad_sync, sharding
+from repro.dist.sharding import (Rules, constrain, get_rules, make_rules,
+                                 set_rules)
+
+__all__ = ["Rules", "constrain", "get_rules", "grad_sync", "make_rules",
+           "set_rules", "sharding"]

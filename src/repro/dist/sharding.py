@@ -1,0 +1,241 @@
+"""Logical-axis sharding rules for the production meshes.
+
+Model code names axes *logically* (``"batch"``, ``"seq"``, ``"embed"``,
+``"vocab"``, ``"heads"``, ``"experts"``, ``"act_d"``) and calls
+``constrain(x, spec)``; a process-global :class:`Rules` object (installed by
+``launch/specs.py`` via ``set_rules``) lowers those names to mesh axes and
+``lax.with_sharding_constraint``. When no rules are installed — every smoke
+test, every single-device run — ``constrain`` is an identity no-op, so the
+same model code runs unsharded without a mesh in scope.
+
+Layout policy (matching DESIGN.md / the dry-run evidence):
+  - ``batch``   -> all batch mesh axes present (``("pod", "data")`` on the
+                   multi-pod mesh, ``("data",)`` on one pod)
+  - ``vocab`` / ``heads`` / ``experts`` -> the ``model`` axis (TP/EP)
+  - ``act_d``   -> ``model`` only for FSDP archs (sequence-parallel-style
+                   activation sharding of the layer-scan carry)
+  - ``seq`` / ``embed`` -> replicated (activations are batch-sharded)
+
+``param_specs`` derives a ZeRO/FSDP+TP PartitionSpec tree generically: the
+largest mesh-divisible dim of each weight goes to ``model``; FSDP archs
+(``cfg.n_params() >= cfg.fsdp_threshold``) additionally shard one remaining
+dim over the batch axes. Stacked-layer leading dims (n_layers is rarely
+divisible by 16) and small glue params (norms, gates) stay replicated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# A logical spec entry: a logical axis name, or None for "replicated dim".
+LogicalSpec = Sequence[Optional[str]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """Resolved logical-axis -> mesh-axis mapping for one (cfg, shape, mesh)."""
+    mesh: Any
+    axes: Dict[str, Any]            # logical name -> mesh axis | tuple | None
+    batch_axes: Tuple[str, ...]     # mesh axes the batch dim shards over
+    shard_batch: bool = True
+    fsdp: bool = False
+
+    def logical(self, spec: LogicalSpec) -> P:
+        """Lower a tuple of logical names (None = replicated) to a
+        PartitionSpec. Unknown names resolve to replicated, so model code may
+        annotate axes the current mesh does not distribute."""
+        return P(*(self.axes.get(name) if name is not None else None
+                   for name in spec))
+
+    def batch_size(self) -> int:
+        n = 1
+        for a in self.batch_axes:
+            n *= dict(self.mesh.shape)[a]
+        return n
+
+
+# ------------------------------------------------------------- global registry
+_RULES: Optional[Rules] = None
+
+
+def get_rules() -> Optional[Rules]:
+    return _RULES
+
+
+def set_rules(rules: Optional[Rules]) -> Optional[Rules]:
+    """Install (or clear, with None) the process-global rules."""
+    global _RULES
+    _RULES = rules
+    return rules
+
+
+class use_rules:
+    """Context manager form of set_rules for tests: restores on exit."""
+
+    def __init__(self, rules: Optional[Rules]):
+        self.rules = rules
+        self._saved: Optional[Rules] = None
+
+    def __enter__(self) -> Optional[Rules]:
+        self._saved = get_rules()
+        set_rules(self.rules)
+        return self.rules
+
+    def __exit__(self, *exc):
+        set_rules(self._saved)
+        return False
+
+
+# ------------------------------------------------------------------ resolution
+def make_rules(cfg, shape, mesh) -> Rules:
+    """Map logical axes to mesh axes for one arch family × input shape.
+
+    The batch mapping drops mesh axes (pod first) until the global batch is
+    divisible by the product of the remaining ones, so odd shapes degrade to
+    fewer-way data parallelism instead of failing to lower.
+    """
+    names = set(mesh.axis_names)
+    msh = dict(mesh.shape)
+    batch_axes = tuple(a for a in ("pod", "data") if a in names)
+    gb = getattr(shape, "global_batch", None)
+    while batch_axes and gb is not None and gb % int(
+            np.prod([msh[a] for a in batch_axes])):
+        batch_axes = batch_axes[1:]
+    model = "model" if "model" in names else None
+    fsdp = cfg.n_params() >= cfg.fsdp_threshold
+    axes = {
+        "batch": batch_axes if batch_axes else None,
+        "seq": None,
+        "embed": None,
+        "vocab": model,
+        "heads": model,
+        "experts": model,
+        "ff": model,
+        "act_d": model if fsdp else None,
+    }
+    return Rules(mesh=mesh, axes=axes, batch_axes=batch_axes,
+                 shard_batch=bool(batch_axes), fsdp=fsdp)
+
+
+# ------------------------------------------------------------------- constrain
+def constrain(x: jax.Array, spec: LogicalSpec) -> jax.Array:
+    """``lax.with_sharding_constraint`` under the installed rules; identity
+    when rules are unset (single-device tests) or the rank mismatches the
+    annotation (callers annotate the common layout; variant ranks pass
+    through)."""
+    rules = get_rules()
+    if rules is None:
+        return x
+    if len(spec) != np.ndim(x):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, rules.logical(spec)))
+
+
+# ----------------------------------------------------------------- spec trees
+def _axis_sizes(mesh, axis) -> int:
+    msh = dict(mesh.shape)
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([msh[a] for a in axis]))
+    return msh[axis]
+
+
+def _leaf_param_spec(shape: Tuple[int, ...], size: int, mesh, model_axis,
+                     dp_axes, fsdp: bool, min_size: int) -> P:
+    """TP the largest model-divisible dim; FSDP one remaining dim."""
+    if not shape or size < min_size:
+        return P()
+    spec: list = [None] * len(shape)
+    if model_axis is not None:
+        m = _axis_sizes(mesh, model_axis)
+        best = -1
+        for i in range(len(shape) - 1, -1, -1):  # prefer trailing dims on ties
+            if shape[i] % m == 0 and shape[i] >= m and (
+                    best < 0 or shape[i] > shape[best]):
+                best = i
+        if best >= 0:
+            spec[best] = model_axis
+    if fsdp and dp_axes:
+        d = _axis_sizes(mesh, dp_axes)
+        for i, s in enumerate(shape):
+            if spec[i] is None and s % d == 0 and s >= d:
+                spec[i] = dp_axes
+                break
+    return P(*spec)
+
+
+def param_specs(cfg, params_abs):
+    """PartitionSpec pytree for a parameter tree (abstract or concrete).
+
+    Requires installed rules (the mesh decides divisibility); without rules
+    every leaf is replicated — callers running single-device get a
+    trivially-correct layout.
+    """
+    rules = get_rules()
+    if rules is None:
+        return jax.tree.map(lambda _: P(), params_abs)
+    model_axis = rules.axes.get("vocab")  # the TP axis (None if mesh lacks it)
+    dp_axes = rules.batch_axes if rules.batch_axes else None
+    return jax.tree.map(
+        lambda l: _leaf_param_spec(tuple(l.shape), int(np.prod(l.shape)),
+                                   rules.mesh, model_axis, dp_axes,
+                                   rules.fsdp, min_size=2 ** 16),
+        params_abs)
+
+
+def batch_specs(cfg, batch_abs):
+    """Batch dict -> specs: dim 0 over the batch axes, rest replicated."""
+    rules = get_rules()
+    if rules is None:
+        return jax.tree.map(lambda _: P(), batch_abs)
+    return jax.tree.map(
+        lambda l: rules.logical(("batch",) + (None,) * (len(l.shape) - 1)),
+        batch_abs)
+
+
+def cache_specs(cfg, cache_abs):
+    """Decode-cache specs: batch dim over the batch axes; KV-heads over
+    ``model`` when divisible, else the sequence dim (sequence-sharded cache —
+    ``decode_attend`` reduces over S with small per-(B,H) collectives).
+
+    Cache leaves carry a leading layer-stack dim ([L, B, S, Hkv, D]; VLM
+    groups add one more: [G, per, B, ...]), which stays replicated.
+    """
+    rules = get_rules()
+    if rules is None:
+        return jax.tree.map(lambda _: P(), cache_abs)
+    model_axis = rules.axes.get("heads")
+    m = _axis_sizes(rules.mesh, model_axis) if model_axis is not None else 1
+    b_axes = rules.batch_axes if rules.shard_batch else None
+    nb = _axis_sizes(rules.mesh, b_axes) if b_axes else 1
+
+    def spec(l) -> P:
+        shape = tuple(l.shape)
+        nd = len(shape)
+        if nd < 2:
+            return P()
+        bi = 2 if cfg.family == "vlm" and nd >= 5 else 1
+        if bi >= nd:
+            return P()
+        out: list = [None] * nd
+        if b_axes and shape[bi] % nb == 0 and shape[bi] >= nb:
+            out[bi] = b_axes
+        if model_axis is not None and m > 1:
+            # prefer the KV-heads dim; fall back to sequence sharding
+            hi = next((i for i in range(nd - 1, bi, -1)
+                       if shape[i] == cfg.n_kv_heads and shape[i] % m == 0),
+                      None)
+            if hi is not None:
+                out[hi] = model_axis
+            elif bi + 1 < nd and shape[bi + 1] % m == 0 and shape[bi + 1] >= m:
+                out[bi + 1] = model_axis
+        return P(*out)
+
+    return jax.tree.map(spec, cache_abs)

@@ -200,10 +200,7 @@ def build_cell(arch: str, shape_name: str, mesh, step: str = "auto",
                     (logit_shard, cshard), (1,), meta)
 
     if step == "fl_round":
-        msh = dict(mesh.shape)
-        n_clients = 1
-        for a in rules.batch_axes:
-            n_clients *= msh[a]
+        n_clients = rules.batch_size()
         # cap per-client/step batch: one client maps to one data slice, so
         # its whole local batch lands on 16 chips — bound the activations
         bs = min(max(shape.global_batch // n_clients, 1), 4)

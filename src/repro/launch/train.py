@@ -22,7 +22,8 @@ from repro import checkpoint as ckpt
 from repro.configs import ARCH_IDS, get_config
 from repro.core.bcrs import pod_link_schedule
 from repro.data import synthetic_lm_tokens
-from repro.dist.grad_sync import (make_compressed_train_step, make_train_step)
+from repro.dist.grad_sync import (init_compressed_state,
+                                  make_compressed_train_step, make_train_step)
 from repro.models import Model
 from repro.optim import make_optimizer
 
@@ -39,12 +40,14 @@ def main():
     ap.add_argument("--reduced", action="store_true",
                     help="reduced config (CPU-runnable)")
     ap.add_argument("--compressed-pods", type=int, default=0,
-                    help="N>0: hierarchical BCRS sync across N virtual pods")
+                    help="N>=2: hierarchical BCRS sync across N virtual pods")
     ap.add_argument("--wire-cr", type=float, default=0.05)
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=20)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.compressed_pods and not args.compressed_pods >= 2:
+        ap.error(f"--compressed-pods must be >= 2 (got {args.compressed_pods})")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -54,11 +57,20 @@ def main():
     opt = make_optimizer(args.optimizer, args.lr)
 
     params = model.init(jax.random.PRNGKey(args.seed))
-    opt_state = opt.init(params)
+    # compressed sync carries per-pod error-feedback residuals in opt_state
+    opt_state = (init_compressed_state(opt, params, n_pods=args.compressed_pods)
+                 if args.compressed_pods else opt.init(params))
     start_step = 0
     if args.checkpoint_dir and ckpt.latest_step(args.checkpoint_dir) is not None:
-        (params, opt_state), start_step, extra = ckpt.restore(
-            args.checkpoint_dir, (params, opt_state))
+        try:
+            (params, opt_state), start_step, extra = ckpt.restore(
+                args.checkpoint_dir, (params, opt_state))
+        except KeyError as e:
+            raise SystemExit(
+                f"[train] checkpoint in {args.checkpoint_dir} does not match "
+                f"the current optimizer-state structure (missing {e}); it was "
+                f"likely written with a different --compressed-pods / "
+                f"--optimizer setting") from e
         print(f"[train] resumed from step {start_step}")
 
     if args.compressed_pods:

@@ -98,8 +98,7 @@ def apply_moe(p, x: jax.Array, *, mo, act: str = "swiglu"
     rules = shd.get_rules()
     n_shards = 1
     if rules is not None and rules.shard_batch:
-        for a in rules.batch_axes:
-            n_shards *= dict(rules.mesh.shape)[a]
+        n_shards = rules.batch_size()
         if t % n_shards or t // n_shards < mo.top_k:
             n_shards = 1
     tl = t // n_shards

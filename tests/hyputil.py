@@ -1,0 +1,41 @@
+"""Import guard for the optional ``hypothesis`` dev dependency.
+
+``from hyputil import given, settings, st`` behaves exactly like the real
+hypothesis imports when the package is installed (see requirements-dev.txt).
+Without it, property tests degrade to per-test skips — collection never
+errors, and the plain unit tests in the same module still run.
+"""
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # degrade: @given tests skip, everything else runs
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for ``st.*`` strategy builders at decoration time."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            # signature-free wrapper: pytest must not try to resolve the
+            # wrapped test's strategy parameters as fixtures
+            def skipper(self=None):
+                pytest.skip("hypothesis not installed "
+                            "(pip install -r requirements-dev.txt)")
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+        return deco

@@ -1,8 +1,7 @@
 """BCRS scheduling tests (paper Alg. 2 + Eq. 6)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hyputil import given, settings, st
 
 from repro.core import bcrs
 from repro.core.cost_model import round_times, sample_links, uncompressed_round

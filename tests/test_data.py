@@ -1,8 +1,7 @@
 """Data pipeline: Dirichlet partitions, client datasets, synthetic streams."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hyputil import given, settings, st
 
 from repro.data import (ClientDataset, build_client_datasets,
                         client_label_histogram, data_fractions,
