@@ -1,0 +1,180 @@
+"""Round-engine benchmark: legacy per-client loop vs the fused jitted round.
+
+    PYTHONPATH=src python -m benchmarks.bench_round [--fast] [--out PATH]
+
+For each (strategy, cohort size K) cell it runs the same seeded simulation
+through both engines, times steady-state rounds (first round excluded as
+warmup/compile), counts XLA backend compilations via jax.monitoring, and
+writes ``BENCH_round.json``:
+
+    {"schema": "bench_round/v1",
+     "env":    {"platform", "jax", "cpu_count"},
+     "config": {"rounds", "warmup", "cr", "fast"},
+     "results": [{"strategy", "clients",
+                  "legacy": {"s_per_round", "s_per_round_min", "total_s",
+                             "compiles"},
+                  "fused":  {"s_per_round", "s_per_round_min", "total_s",
+                             "compiles", "round_step_traces"},
+                  "speedup", "accuracy_max_abs_diff"}, ...]}
+
+``s_per_round`` is the median post-warmup wall time of one full round
+(batch staging + local training + compression + aggregation + server
+update; evaluation excluded); ``s_per_round_min`` the fastest such round.
+``speedup`` = legacy min / fused min (scheduler noise only adds time, so
+per-engine minima give the stable ratio on shared CI hardware).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import sys
+import time
+
+import numpy as np
+
+import jax
+
+from repro.core.aggregation import AggregationConfig
+from repro.fed import round_step
+from repro.fed.simulation import FLSimConfig, run_fl
+
+STRATEGIES = ("fedavg", "eftopk", "bcrs_opwa")
+
+
+class CompileCounter:
+    """Counts XLA backend compilations via jax.monitoring duration events."""
+
+    def __init__(self):
+        self.n = 0
+        self._active = False
+
+    def _cb(self, name, duration, **kwargs):
+        if self._active and "backend_compile" in name:
+            self.n += 1
+
+    def __enter__(self):
+        jax.monitoring.register_event_duration_secs_listener(self._cb)
+        self._active = True
+        return self
+
+    def __exit__(self, *exc):
+        # the gate above makes a leaked listener inert; the unregister hook
+        # is private jax API, so treat it as best-effort
+        self._active = False
+        try:
+            from jax._src import monitoring
+            monitoring._unregister_event_duration_listener_by_callback(
+                self._cb)
+        except (ImportError, AttributeError):
+            pass
+        return False
+
+
+BENCH_BETA = 20.0
+
+
+def _sim_config(clients: int, rounds: int) -> FLSimConfig:
+    # Full participation (cohort size == n_clients == K), ~96 samples and
+    # one local batch per client per round: the paper's communication-bound
+    # regime (large model, few local steps), where the round engine — not
+    # local SGD — is the cost. beta=20 keeps Dirichlet label skew but
+    # balanced enough that min_size=batch_size partitions sample quickly and
+    # per-client step counts are comparable (extreme skew inflates the
+    # fused path's padded-step waste; tracked as a ROADMAP open item).
+    return FLSimConfig(n_clients=clients, participation=1.0, rounds=rounds,
+                       n_train=96 * clients, n_test=600,
+                       eval_every=10_000, seed=7, beta=BENCH_BETA)
+
+
+def bench_cell(strategy: str, clients: int, rounds: int, warmup: int,
+               cr: float) -> dict:
+    acfg = AggregationConfig(strategy=strategy, cr=cr)
+    sim = _sim_config(clients, rounds)
+    out = {"strategy": strategy, "clients": clients}
+    accs = {}
+    for mode, fused in (("legacy", False), ("fused", True)):
+        traces0 = sum(round_step.TRACE_COUNTS.values())
+        with CompileCounter() as cc:
+            t0 = time.perf_counter()
+            res = run_fl(sim, acfg, fused=fused)
+            total = time.perf_counter() - t0
+        steady = res.wall_per_round[warmup:]
+        out[mode] = {
+            "s_per_round": statistics.median(steady),
+            "s_per_round_min": min(steady),
+            "total_s": total,
+            "compiles": cc.n,
+        }
+        if fused:
+            out[mode]["round_step_traces"] = (
+                sum(round_step.TRACE_COUNTS.values()) - traces0)
+        accs[mode] = np.array([a for _, a in res.accuracies])
+    # ratio of fastest observed steady-state rounds (timeit-style: scheduler
+    # noise only ever adds time, so min is the robust per-engine estimate)
+    out["speedup"] = (out["legacy"]["s_per_round_min"]
+                      / out["fused"]["s_per_round_min"])
+    out["accuracy_max_abs_diff"] = float(
+        np.abs(accs["legacy"] - accs["fused"]).max())
+    return out
+
+
+def run(fast: bool = False, rounds: int = 0, out_path: str = "BENCH_round.json"
+        ) -> dict:
+    ks = (8, 16) if fast else (8, 16, 32)
+    rounds = rounds or (8 if fast else 12)
+    warmup, cr = 2, 0.1
+    if rounds <= warmup:
+        raise SystemExit(f"--rounds must exceed the {warmup} warmup rounds")
+    results = []
+    for clients in ks:
+        for strategy in STRATEGIES:
+            cell = bench_cell(strategy, clients, rounds, warmup, cr)
+            results.append(cell)
+            print(f"{strategy:>10} K={clients:<3} "
+                  f"legacy {cell['legacy']['s_per_round_min'] * 1e3:8.1f} "
+                  f"ms/round ({cell['legacy']['compiles']:3d} compiles)  "
+                  f"fused {cell['fused']['s_per_round_min'] * 1e3:8.1f} "
+                  f"ms/round ({cell['fused']['compiles']:3d} compiles)  "
+                  f"speedup {cell['speedup']:.2f}x  "
+                  f"|dacc| {cell['accuracy_max_abs_diff']:.1e}")
+    doc = {
+        "schema": "bench_round/v1",
+        "env": {"platform": jax.devices()[0].platform,
+                "jax": jax.__version__,
+                "cpu_count": os.cpu_count()},
+        "config": {"rounds": rounds, "warmup": warmup, "cr": cr,
+                   "beta": BENCH_BETA, "participation": 1.0,
+                   "n_train_per_client": 96, "fast": fast},
+        "results": results,
+    }
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"wrote {out_path}")
+    return doc
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="K in {8,16}, fewer rounds (CI-speed)")
+    ap.add_argument("--rounds", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_round.json")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless fused beats legacy >=3x at "
+                         "K=16 bcrs_opwa")
+    args = ap.parse_args()
+    doc = run(fast=args.fast, rounds=args.rounds, out_path=args.out)
+    if args.check:
+        cell = next(r for r in doc["results"]
+                    if r["strategy"] == "bcrs_opwa" and r["clients"] == 16)
+        if cell["speedup"] < 3.0:
+            print(f"FAIL: bcrs_opwa K=16 speedup {cell['speedup']:.2f}x < 3x")
+            return 1
+        print(f"OK: bcrs_opwa K=16 speedup {cell['speedup']:.2f}x")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

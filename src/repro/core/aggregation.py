@@ -9,9 +9,14 @@ server subtracts:  w_{t+1} = w_t − η · agg.
   eftopk      topk + client-side error feedback residuals
   bcrs        per-client CRs from bandwidth schedule + Eq. 6 coefficients
   bcrs_opwa   bcrs + overlap-aware parameter mask (Alg. 3)
+
+The host-side schedule (``round_schedule``) is shared by the eager path here
+and the fused jitted round (repro.fed.round_step): per-round CRs/coefficients
+stay host-scheduled numpy, everything per-parameter is traced.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Optional, Tuple
 
@@ -33,9 +38,49 @@ class AggregationConfig:
     overlap_d: int = 1             # OPWA required degree of overlap
     block_topk: bool = False       # use TPU block top-k instead of exact
     block_size: int = 8192
-    use_kernel: bool = False       # route through the Pallas kernels
+    use_kernel: object = "auto"    # Pallas kernels: True | False | "auto"
 
 
+# ------------------------------------------------------------- host schedule
+def round_schedule(acfg: AggregationConfig, k: int, data_fracs: np.ndarray,
+                   links=None, v_bytes: float = 0.0
+                   ) -> Tuple[np.ndarray, np.ndarray, dict]:
+    """Host-side per-round schedule: (crs [k], agg weights [k], info).
+
+    fedavg/topk/eftopk weight by data fractions; bcrs* weight by the Eq. 6
+    coefficients from the bandwidth schedule. ``info`` carries the same keys
+    the eager ``aggregate`` used to emit (no "crs" for fedavg, so the
+    server's time accounting falls back to CR=1 exactly as before).
+    """
+    info: dict = {"strategy": acfg.strategy}
+    f = np.asarray(data_fracs, np.float64)
+    if acfg.strategy == "fedavg":
+        return np.ones((k,)), f, info
+    if acfg.strategy in ("topk", "eftopk"):
+        crs = np.full((k,), acfg.cr)
+        info["crs"] = crs
+        return crs, f, info
+    if acfg.strategy in ("bcrs", "bcrs_opwa"):
+        assert links is not None and v_bytes > 0, "BCRS needs link models"
+        sched = bcrs_mod.make_schedule(links, f, v_bytes, acfg.cr, acfg.alpha)
+        info["crs"] = sched.crs
+        info["coefficients"] = sched.coefficients
+        info["t_bench"] = sched.t_bench
+        return sched.crs, sched.coefficients, info
+    raise ValueError(f"unknown strategy {acfg.strategy!r}")
+
+
+def ks_for_schedule(n: int, crs: np.ndarray, acfg: AggregationConfig
+                    ) -> np.ndarray:
+    """Per-client retained counts for the traced compressors. Computed on
+    host in f64 so they match the legacy per-client ``k_for_ratio`` exactly
+    (block mode: k per block of ``block_size``)."""
+    base = acfg.block_size if acfg.block_topk else n
+    return np.asarray([comp.k_for_ratio(base, float(c)) for c in crs],
+                      np.int32)
+
+
+# ------------------------------------------------------- client compression
 def _compress_fn(acfg: AggregationConfig):
     if acfg.block_topk:
         return lambda u, cr: comp.block_topk_compress(
@@ -43,11 +88,43 @@ def _compress_fn(acfg: AggregationConfig):
     return comp.topk_compress
 
 
+@functools.partial(jax.jit, static_argnames=("block",))
+def _compress_batch(updates, ks, residuals, block):
+    fn = (comp.topk_compress_batch if block is None else
+          functools.partial(comp.block_topk_compress_batch, block=block))
+    if residuals is None:
+        c = fn(updates, ks)
+        return c.values, c.mask, None
+    c, new_res = comp.ef_compress_batch(residuals, updates, ks,
+                                        compress_batch=fn)
+    return c.values, c.mask, new_res
+
+
 def compress_clients(updates: jax.Array, crs: np.ndarray,
                      acfg: AggregationConfig,
                      residuals: Optional[jax.Array] = None
                      ) -> Tuple[jax.Array, jax.Array, Optional[jax.Array]]:
-    """updates [K, n] -> (values [K, n], masks [K, n], new_residuals)."""
+    """updates [K, n] -> (values [K, n], masks [K, n], new_residuals).
+
+    One compiled program with *traced* per-client k — any BCRS schedule
+    reuses the same executable (the legacy loop re-lowered ``lax.top_k``
+    per distinct static CR). Kernel-backed block top-k keeps the loop path
+    (the Pallas kernel wants a static k); everything else is vectorized.
+    """
+    if acfg.block_topk and comp.resolve_use_kernel(acfg.use_kernel):
+        return compress_clients_loop(updates, crs, acfg, residuals)
+    ks = jnp.asarray(ks_for_schedule(updates.shape[1], crs, acfg))
+    block = acfg.block_size if acfg.block_topk else None
+    return _compress_batch(updates, ks, residuals, block)
+
+
+def compress_clients_loop(updates: jax.Array, crs: np.ndarray,
+                          acfg: AggregationConfig,
+                          residuals: Optional[jax.Array] = None
+                          ) -> Tuple[jax.Array, jax.Array, Optional[jax.Array]]:
+    """Legacy per-client loop (static-CR compressors). Kept as the parity
+    reference for the vectorized path and as the route to the static-k
+    Pallas block-top-k kernel."""
     fn = _compress_fn(acfg)
     vals, masks, new_res = [], [], []
     for i in range(updates.shape[0]):
@@ -64,44 +141,42 @@ def compress_clients(updates: jax.Array, crs: np.ndarray,
             jnp.stack(new_res) if residuals is not None else None)
 
 
+# ------------------------------------------------------------- eager rounds
 def aggregate(updates: jax.Array, data_fracs: np.ndarray,
               acfg: AggregationConfig,
               links=None, v_bytes: float = 0.0,
-              residuals: Optional[jax.Array] = None
+              residuals: Optional[jax.Array] = None,
+              use_loop: bool = False
               ) -> Tuple[jax.Array, dict, Optional[jax.Array]]:
-    """Run one server aggregation. Returns (agg [n], info, new_residuals)."""
+    """Run one server aggregation. Returns (agg [n], info, new_residuals).
+
+    ``use_loop=True`` compresses via the legacy per-client static-CR loop
+    (the seed behavior the fused round is benchmarked against); the default
+    is the single-executable traced-k path.
+    """
     k, n = updates.shape
-    f = jnp.asarray(data_fracs, jnp.float32)
-    info: dict = {"strategy": acfg.strategy}
+    crs, weights, info = round_schedule(acfg, k, data_fracs, links, v_bytes)
+    compress = compress_clients_loop if use_loop else compress_clients
 
     if acfg.strategy == "fedavg":
+        f = jnp.asarray(weights, jnp.float32)
         agg = jnp.einsum("k,kn->n", f, updates.astype(jnp.float32))
         return agg, info, None
 
     if acfg.strategy in ("topk", "eftopk"):
-        crs = np.full((k,), acfg.cr)
         res = residuals if acfg.strategy == "eftopk" else None
-        vals, masks, new_res = compress_clients(updates, crs, acfg, res)
+        vals, masks, new_res = compress(updates, crs, acfg, res)
+        f = jnp.asarray(weights, jnp.float32)
         agg = jnp.einsum("k,kn->n", f, vals.astype(jnp.float32))
-        info["crs"] = crs
         return agg, info, new_res
 
-    if acfg.strategy in ("bcrs", "bcrs_opwa"):
-        assert links is not None and v_bytes > 0, "BCRS needs link models"
-        sched = bcrs_mod.make_schedule(links, np.asarray(data_fracs),
-                                       v_bytes, acfg.cr, acfg.alpha)
-        vals, masks, new_res = compress_clients(updates, sched.crs, acfg,
-                                                residuals)
-        coeffs = jnp.asarray(sched.coefficients, jnp.float32)
-        if acfg.strategy == "bcrs_opwa":
-            agg = opwa_mod.opwa_aggregate(vals, masks, coeffs, acfg.gamma,
-                                          acfg.overlap_d,
-                                          use_kernel=acfg.use_kernel)
-        else:
-            agg = opwa_mod.bcrs_aggregate(vals, coeffs)
-        info["crs"] = sched.crs
-        info["coefficients"] = sched.coefficients
-        info["t_bench"] = sched.t_bench
-        return agg, info, new_res
-
-    raise ValueError(f"unknown strategy {acfg.strategy!r}")
+    # bcrs / bcrs_opwa
+    vals, masks, new_res = compress(updates, crs, acfg, residuals)
+    coeffs = jnp.asarray(weights, jnp.float32)
+    if acfg.strategy == "bcrs_opwa":
+        agg = opwa_mod.opwa_aggregate(vals, masks, coeffs, acfg.gamma,
+                                      acfg.overlap_d,
+                                      use_kernel=acfg.use_kernel)
+    else:
+        agg = opwa_mod.bcrs_aggregate(vals, coeffs)
+    return agg, info, new_res

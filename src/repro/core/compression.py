@@ -32,6 +32,14 @@ def k_for_ratio(n: int, cr: float) -> int:
     return max(1, min(n, int(round(n * cr))))
 
 
+def resolve_use_kernel(flag) -> bool:
+    """``use_kernel`` tri-state: True / False / "auto" (Pallas on TPU,
+    XLA reference elsewhere — same detection as dist.grad_sync)."""
+    if flag == "auto":
+        return jax.devices()[0].platform == "tpu"
+    return bool(flag)
+
+
 # ------------------------------------------------------------------- top-k
 def topk_compress(u: jax.Array, cr: float) -> Compressed:
     """Exact global magnitude Top-K. u: flat [n]."""
@@ -47,14 +55,14 @@ def topk_compress(u: jax.Array, cr: float) -> Compressed:
 
 
 def block_topk_compress(u: jax.Array, cr: float, block: int = 8192,
-                        use_kernel: bool = False) -> Compressed:
+                        use_kernel="auto") -> Compressed:
     """Per-block magnitude Top-K (TPU adaptation; see DESIGN.md §2).
 
     Pads to a block multiple; each block keeps its own top ``cr`` fraction,
     preserving the global compression ratio exactly while keeping selection
     inside VMEM-sized tiles.
     """
-    if use_kernel:
+    if resolve_use_kernel(use_kernel):
         from repro.kernels import ops as kops
         return kops.block_topk(u, cr, block=block)
     n = u.shape[0]
@@ -71,27 +79,65 @@ def block_topk_compress(u: jax.Array, cr: float, block: int = 8192,
 
 
 def topk_compress_dynamic(u: jax.Array, k: jax.Array,
-                          n_iters: int = 40) -> Compressed:
+                          n_iters: int = 32) -> Compressed:
     """Top-K with a *traced* k (per-client BCRS ratios under vmap).
 
-    Threshold bisection (same scheme as the Pallas block_topk kernel): after
-    ``n_iters`` halvings the interval is below one f32 ULP, so the mask
-    equals the exact ``|u| >= k-th largest`` selection (ties kept).
+    Threshold bisection on the f32 *bit pattern* of |u|: non-negative IEEE
+    floats order identically to their unsigned bit patterns, so bisecting the
+    integer interval pins the exact k-th-largest magnitude in <= 32 halvings
+    regardless of scale (a value-space bisection needs ~40 iterations and
+    still loses exactness when the threshold is denormal-small, e.g. CR→1).
+    The mask equals the exact ``|u| >= k-th largest`` selection (ties kept).
     """
     mag = jnp.abs(u.astype(jnp.float32))
-    hi = jnp.max(mag)
-    lo = jnp.zeros_like(hi)
+    bits = jax.lax.bitcast_convert_type(mag, jnp.uint32)
+    hi = jnp.max(bits) + 1          # invariant: count(bits >= hi) < k
+    lo = jnp.zeros_like(hi)         # invariant: count(bits >= lo) >= k
 
     def body(_, lohi):
         lo, hi = lohi
-        mid = 0.5 * (lo + hi)
-        cnt = jnp.sum(mag >= mid)
+        mid = lo + ((hi - lo) >> 1)
+        cnt = jnp.sum(bits >= mid)
         pred = cnt >= k
         return jnp.where(pred, mid, lo), jnp.where(pred, hi, mid)
 
     lo, _ = jax.lax.fori_loop(0, n_iters, body, (lo, hi))
-    mask = mag >= lo
+    mask = bits >= lo
     return Compressed(jnp.where(mask, u, 0), mask)
+
+
+# ------------------------------------------------- batched traced-k top-k
+def topk_compress_batch(updates: jax.Array, ks: jax.Array) -> Compressed:
+    """Per-row dynamic Top-K: updates [K, n], ks int32 [K] (traced).
+
+    One trace serves every BCRS schedule — the per-client ``float(cr)``
+    static-arg retrace this replaces cost O(rounds × K) XLA compiles."""
+    return jax.vmap(topk_compress_dynamic)(updates, ks)
+
+
+def block_topk_compress_batch(updates: jax.Array, ks_block: jax.Array,
+                              block: int = 8192) -> Compressed:
+    """Per-row *blockwise* dynamic Top-K: each client keeps its top
+    ``ks_block[i]`` entries per ``block``-sized tile (traced k)."""
+    c, n = updates.shape
+    n_pad = (-n) % block
+    ub = jnp.pad(updates, ((0, 0), (0, n_pad))).reshape(c, -1, block)
+    per_block = jax.vmap(lambda u, k: jax.vmap(
+        lambda b: topk_compress_dynamic(b, k))(u))
+    comp = per_block(ub, ks_block)
+    return Compressed(comp.values.reshape(c, -1)[:, :n],
+                      comp.mask.reshape(c, -1)[:, :n])
+
+
+def ef_compress_batch(residuals: jax.Array, updates: jax.Array,
+                      ks: jax.Array,
+                      compress_batch: Callable = topk_compress_batch
+                      ) -> Tuple[Compressed, jax.Array]:
+    """Batched EF-TopK: bit-compatible with a per-client ``ef_compress``
+    loop (same corrected/send/residual arithmetic, vectorized)."""
+    corrected = residuals + updates
+    comp = compress_batch(corrected, ks)
+    return comp, corrected - comp.values
 
 
 def randk_compress(u: jax.Array, cr: float, key) -> Compressed:

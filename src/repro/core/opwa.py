@@ -17,6 +17,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.compression import resolve_use_kernel
+
 
 def overlap_counts(masks: jax.Array) -> jax.Array:
     """masks: bool/int [K, n] (K clients) -> int32 counts [n]."""
@@ -31,22 +33,24 @@ def opwa_mask(counts: jax.Array, gamma: float, d: int = 1) -> jax.Array:
 
 def overlap_histogram(masks: jax.Array, k_max: Optional[int] = None
                       ) -> jax.Array:
-    """Counts-of-counts for the paper's Fig. 4 (degree-of-overlap dist)."""
+    """Counts-of-counts for the paper's Fig. 4 (degree-of-overlap dist).
+
+    One ``bincount`` reduction (single pass over counts) instead of K+1
+    masked sums; degrees above ``k_max`` are dropped, as before."""
     counts = overlap_counts(masks)
     k_max = k_max or masks.shape[0]
-    return jnp.stack([jnp.sum((counts == c) & (c > 0)) if c else jnp.sum(counts == 0)
-                      for c in range(k_max + 1)])
+    return jnp.bincount(counts.reshape(-1), length=k_max + 1)
 
 
 def opwa_aggregate(updates: jax.Array, masks: jax.Array, coeffs: jax.Array,
                    gamma: float, d: int = 1,
-                   use_kernel: bool = False) -> jax.Array:
+                   use_kernel="auto") -> jax.Array:
     """Fused OPWA aggregation.
 
     updates: [K, n] dense-masked sparse updates; masks: [K, n] bool;
     coeffs: [K] client coefficients p'_i. Returns M ⊙ Σ_i p'_i u_i  [n].
     """
-    if use_kernel:
+    if resolve_use_kernel(use_kernel):
         from repro.kernels import ops as kops
         return kops.overlap_combine(updates, masks, coeffs, gamma, d)
     counts = overlap_counts(masks)

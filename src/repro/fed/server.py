@@ -2,6 +2,16 @@
 
 Holds the global model (flat vector + unravel), per-client EF residuals,
 the time accumulator, and applies  w <- w - eta * agg  per round.
+
+Two execution paths share the same state and host-side BCRS schedule:
+
+  * ``round``        — the legacy eager loop (parity reference): flattens
+                       host-side client deltas, compresses/aggregates op by
+                       op, updates the flat model on host;
+  * ``round_fused``  — ONE jitted program (repro.fed.round_step): local
+                       training, compression, EF, OPWA, and the server
+                       update run inside a single XLA executable with the
+                       flat model / residual buffers donated.
 """
 from __future__ import annotations
 
@@ -15,7 +25,7 @@ import numpy as np
 from repro.core import aggregation as agg_mod
 from repro.core import bcrs as bcrs_mod
 from repro.core import cost_model
-from repro.core.compression import flatten_tree
+from repro.core.compression import flatten_tree, k_for_ratio
 
 
 @dataclass
@@ -33,41 +43,111 @@ class FLServer:
         self._flat = flat.astype(jnp.float32)
         self.n_params = int(flat.shape[0])
         self.v_bytes = float(self.n_params * 4)   # fp32 update bytes
+        self._fused_step = None
+        self._fused_step_overlap = None
+
+    # ------------------------------------------------------------------
+    def _selected_links(self, selected):
+        return ([self.links[i] for i in selected]
+                if self.links is not None else None)
+
+    def _account_time(self, info: dict, links) -> None:
+        """Paper §5.2 metrics, shared by both round paths."""
+        if links is None:
+            return
+        crs = info.get("crs", np.ones(len(links)))
+        if self.acfg.strategy == "fedavg":
+            rt = cost_model.uncompressed_round(links, self.v_bytes)
+        else:
+            rt = cost_model.round_times(links, self.v_bytes, crs)
+        self.times.add(rt)
+        info["round_time"] = rt
 
     # ------------------------------------------------------------------
     def round(self, client_deltas: List, data_fracs: np.ndarray,
               selected: np.ndarray) -> dict:
-        """Aggregate one round. client_deltas: list of pytrees (w_t - w_i).
-        ``selected``: client indices (for link lookup). Returns info dict."""
+        """Aggregate one round (legacy eager engine: per-client static-CR
+        compression loop — the seed behavior, kept as the fused round's
+        parity/benchmark reference). client_deltas: list of pytrees
+        (w_t - w_i); ``selected``: client indices (for link lookup)."""
         flat_updates = jnp.stack([flatten_tree(d)[0].astype(jnp.float32)
                                   for d in client_deltas])
-        links = ([self.links[i] for i in selected]
-                 if self.links is not None else None)
+        links = self._selected_links(selected)
         if self.acfg.strategy == "eftopk":
             if (self._residuals is None
                     or self._residuals.shape[0] != flat_updates.shape[0]):
                 self._residuals = jnp.zeros_like(flat_updates)
             agg, info, new_res = agg_mod.aggregate(
                 flat_updates, data_fracs, self.acfg, links=links,
-                v_bytes=self.v_bytes, residuals=self._residuals)
+                v_bytes=self.v_bytes, residuals=self._residuals,
+                use_loop=True)
             self._residuals = new_res
         else:
             agg, info, _ = agg_mod.aggregate(
                 flat_updates, data_fracs, self.acfg, links=links,
-                v_bytes=self.v_bytes)
+                v_bytes=self.v_bytes, use_loop=True)
         self._flat = self._flat - self.eta * agg
         self.params = self._unravel(self._flat)
+        self._account_time(info, links)
+        return info
 
-        # --- time accounting (paper §5.2 metrics)
-        if links is not None:
-            if "crs" in info:
-                crs = info["crs"]
-            else:
-                crs = np.ones(len(links))
-            if self.acfg.strategy == "fedavg":
-                rt = cost_model.uncompressed_round(links, self.v_bytes)
-            else:
-                rt = cost_model.round_times(links, self.v_bytes, crs)
-            self.times.add(rt)
-            info["round_time"] = rt
+    # ------------------------------------------------------------------
+    def init_fused(self, loss_fn: Callable, lr: float,
+                   collect_overlap: bool = False) -> None:
+        """Compile-once setup for ``round_fused``: builds the fused round
+        program (plus the Fig. 4 overlap-instrumented variant on demand)."""
+        from repro.fed import round_step as rs
+        self._fused_step = rs.make_round_step(
+            loss_fn, self.params, lr=lr, acfg=self.acfg, eta=self.eta)
+        if collect_overlap:
+            self._fused_step_overlap = rs.make_round_step(
+                loss_fn, self.params, lr=lr, acfg=self.acfg, eta=self.eta,
+                with_overlap=True)
+
+    def round_fused(self, batches, step_mask, data_fracs: np.ndarray,
+                    selected: np.ndarray, want_overlap: bool = False) -> dict:
+        """One fused round: batches is a pytree of [C, S, ...] stacked client
+        batches, step_mask [C, S] marks real (non-padded) local steps."""
+        if self._fused_step is None:
+            raise RuntimeError("call init_fused(loss_fn, lr) first")
+        k = int(jax.tree.leaves(batches)[0].shape[0])
+        links = self._selected_links(selected)
+        crs, weights, info = agg_mod.round_schedule(
+            self.acfg, k, data_fracs, links, self.v_bytes)
+        ks = jnp.asarray(agg_mod.ks_for_schedule(self.n_params, crs,
+                                                 self.acfg))
+        if want_overlap:
+            if self._fused_step_overlap is None:
+                raise RuntimeError(
+                    "round_fused(want_overlap=True) needs "
+                    "init_fused(..., collect_overlap=True)")
+            # Fig. 4 instrumentation mirrors the legacy fallback: schedule
+            # CRs when the strategy has them, else the configured CR*
+            # (fedavg's schedule crs are all-ones and would make the
+            # histogram degenerate)
+            crs_overlap = info.get("crs", np.full(k, self.acfg.cr))
+            ks_overlap = jnp.asarray(
+                [k_for_ratio(self.n_params, float(c)) for c in crs_overlap],
+                jnp.int32)
+        else:
+            ks_overlap = ks    # ignored by the non-instrumented step
+
+        residuals = None
+        if self.acfg.strategy == "eftopk":
+            if (self._residuals is None
+                    or self._residuals.shape[0] != k):
+                self._residuals = jnp.zeros((k, self.n_params), jnp.float32)
+            residuals = self._residuals
+
+        step = self._fused_step_overlap if want_overlap else self._fused_step
+        out = step(self._flat, residuals, batches, step_mask,
+                   jnp.asarray(weights, jnp.float32), ks, ks_overlap)
+        self._flat = out["flat"]
+        if self.acfg.strategy == "eftopk":
+            self._residuals = out["residuals"]
+        self.params = self._unravel(self._flat)
+        info["loss"] = out["loss"]
+        if "overlap_counts" in out:
+            info["overlap_counts"] = out["overlap_counts"]
+        self._account_time(info, links)
         return info

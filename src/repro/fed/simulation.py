@@ -6,10 +6,20 @@ targets the paper's *relative* claims; see DESIGN.md §7):
 
   for each round: sample C·N clients -> E local epochs SGD -> compress ->
   aggregate (fedavg | topk | eftopk | bcrs | bcrs_opwa) -> time accounting.
+
+Two round engines (``fused`` flag):
+
+  * fused (default): the whole round is ONE jitted program
+    (repro.fed.round_step) — clients vmapped, traced-k compression, server
+    update with donated buffers. O(1) XLA compiles per simulation.
+  * legacy: the original per-client Python loop, kept as the parity
+    reference (same rng stream, same schedules -> accuracies match the
+    fused path within float-accumulation noise).
 """
 from __future__ import annotations
 
 import functools
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -88,27 +98,68 @@ class FLSimResult:
     times: Optional[cost_model.TimeAccumulator] = None
     overlap_hist: Optional[np.ndarray] = None
     final_accuracy: float = 0.0
+    wall_per_round: List[float] = field(default_factory=list)
+    executed_rounds: List[int] = field(default_factory=list)
 
     def time_to_accuracy(self, target: float) -> Optional[float]:
-        """Accumulated actual comm time when accuracy first hits target."""
+        """Accumulated actual comm time up to AND INCLUDING the round whose
+        evaluation first hits ``target`` (None if never reached).
+
+        ``times.per_round[i]`` belongs to round ``executed_rounds[i]`` —
+        rounds skipped by failure injection add no time entry, so the two
+        lists are aligned by position, not by round number."""
         if self.times is None:
             return None
-        acc_time = 0.0
-        per_round = {i: rt for i, rt in enumerate(self.times.per_round)}
-        last_r = 0
+        per_round = self.times.per_round
+        rounds_of = (self.executed_rounds
+                     if len(self.executed_rounds) == len(per_round)
+                     else list(range(len(per_round))))
         cum = 0.0
+        i = 0
         for r, acc in self.accuracies:
-            for i in range(last_r, min(r, len(self.times.per_round))):
-                cum += self.times.per_round[i].actual
-            last_r = r
+            while i < len(per_round) and rounds_of[i] <= r:
+                cum += per_round[i].actual
+                i += 1
             if acc >= target:
                 return cum
         return None
 
 
+# ----------------------------------------------------------- fused batching
+def _client_steps(ds, sim: FLSimConfig) -> int:
+    return max(1, (len(ds) // sim.batch_size)) * sim.local_epochs
+
+
+def _stack_client_batches(clients, selected, sim: FLSimConfig, s_max: int,
+                          rng) -> Tuple[dict, jax.Array]:
+    """Draw each selected client's batches (same rng stream as the legacy
+    loop), zero-pad to ``s_max`` steps, stack to [C, S, ...] + mask [C, S].
+
+    Padded steps carry zeros and are masked to exact no-ops inside the
+    fused trainer, so ragged step counts cost one static shape, not one
+    recompile per cohort."""
+    xs_all, ys_all = [], []
+    mask = np.zeros((len(selected), s_max), bool)
+    for j, c in enumerate(selected):
+        ds = clients[c]
+        steps = _client_steps(ds, sim)
+        xs, ys = ds.fixed_batches(sim.batch_size, steps, rng)
+        if steps < s_max:
+            xs = np.concatenate(
+                [xs, np.zeros((s_max - steps,) + xs.shape[1:], xs.dtype)])
+            ys = np.concatenate(
+                [ys, np.zeros((s_max - steps,) + ys.shape[1:], ys.dtype)])
+        xs_all.append(xs)
+        ys_all.append(ys)
+        mask[j, :steps] = True
+    batches = {"x": jnp.asarray(np.stack(xs_all)),
+               "y": jnp.asarray(np.stack(ys_all))}
+    return batches, jnp.asarray(mask)
+
+
 def run_fl(sim: FLSimConfig, acfg: agg_mod.AggregationConfig,
            failure: Optional[FailureInjector] = None,
-           collect_overlap: bool = False) -> FLSimResult:
+           collect_overlap: bool = False, fused: bool = True) -> FLSimResult:
     rng = np.random.default_rng(sim.seed)
     key = jax.random.PRNGKey(sim.seed)
 
@@ -126,42 +177,65 @@ def run_fl(sim: FLSimConfig, acfg: agg_mod.AggregationConfig,
     params = mlp_init(key, sim.dim, sim.n_classes, hidden=sim.hidden)
     links = cost_model.sample_links(sim.n_clients, rng)
     server = FLServer(params=params, acfg=acfg, eta=1.0, links=links)
-    local_train = jax.jit(make_local_trainer(mlp_loss, sim.lr))
+    if fused:
+        server.init_fused(mlp_loss, sim.lr, collect_overlap=collect_overlap)
+        s_max = max(_client_steps(ds, sim) for ds in clients)
+    else:
+        local_train = jax.jit(make_local_trainer(mlp_loss, sim.lr))
 
     result = FLSimResult()
     overlap_hists = []
     n_sel = max(1, int(round(sim.n_clients * sim.participation)))
 
     for rnd in range(sim.rounds):
+        t0 = time.perf_counter()
         selected = rng.choice(sim.n_clients, n_sel, replace=False)
         if failure is not None:
             alive = failure.survivors(rnd, sim.n_clients)
             selected = np.array([c for c in selected if alive[c]])
             if len(selected) == 0:
                 continue
-        deltas = []
-        for c in selected:
-            ds = clients[c]
-            steps = max(1, (len(ds) // sim.batch_size)) * sim.local_epochs
-            xs, ys = ds.fixed_batches(sim.batch_size, steps, rng)
-            delta, _ = local_train(server.params,
-                                   {"x": jnp.asarray(xs), "y": jnp.asarray(ys)})
-            deltas.append(delta)
         fr = fracs_all[selected]
         fr = fr / fr.sum()
-        info = server.round(deltas, fr, selected)
+        is_overlap_round = collect_overlap and rnd == sim.rounds // 2
 
-        if collect_overlap and rnd == sim.rounds // 2:
-            # reproduce Fig. 4: histogram of retained-parameter overlap
-            from repro.core.compression import flatten_tree, topk_compress
-            flat = jnp.stack([flatten_tree(d)[0] for d in deltas])
-            crs = info.get("crs", np.full(len(deltas), acfg.cr))
-            masks = jnp.stack([
-                topk_compress(flat[i], float(crs[i])).mask
-                for i in range(flat.shape[0])])
-            counts = np.asarray(overlap_counts(masks))
-            hist = np.bincount(counts[counts > 0], minlength=len(deltas) + 1)
-            overlap_hists.append(hist)
+        if fused:
+            batches, step_mask = _stack_client_batches(
+                clients, selected, sim, s_max, rng)
+            info = server.round_fused(batches, step_mask, fr, selected,
+                                      want_overlap=is_overlap_round)
+            if is_overlap_round:
+                counts = np.asarray(info["overlap_counts"])
+                overlap_hists.append(np.bincount(
+                    counts[counts > 0], minlength=len(selected) + 1))
+        else:
+            deltas = []
+            for c in selected:
+                ds = clients[c]
+                steps = _client_steps(ds, sim)
+                xs, ys = ds.fixed_batches(sim.batch_size, steps, rng)
+                delta, _ = local_train(
+                    server.params,
+                    {"x": jnp.asarray(xs), "y": jnp.asarray(ys)})
+                deltas.append(delta)
+            info = server.round(deltas, fr, selected)
+
+            if is_overlap_round:
+                # reproduce Fig. 4: histogram of retained-parameter overlap
+                from repro.core.compression import flatten_tree, topk_compress
+                flat = jnp.stack([flatten_tree(d)[0] for d in deltas])
+                crs = info.get("crs", np.full(len(deltas), acfg.cr))
+                masks = jnp.stack([
+                    topk_compress(flat[i], float(crs[i])).mask
+                    for i in range(flat.shape[0])])
+                counts = np.asarray(overlap_counts(masks))
+                hist = np.bincount(counts[counts > 0],
+                                   minlength=len(deltas) + 1)
+                overlap_hists.append(hist)
+
+        server._flat.block_until_ready()
+        result.wall_per_round.append(time.perf_counter() - t0)
+        result.executed_rounds.append(rnd)
 
         if rnd % sim.eval_every == 0 or rnd == sim.rounds - 1:
             acc = float(mlp_accuracy(server.params, jnp.asarray(x_test),

@@ -121,6 +121,32 @@ class TestSparseFormat:
         np.testing.assert_allclose(np.asarray(dense), np.asarray(c.values),
                                    rtol=1e-6)
 
+    @given(st.integers(64, 2000), st.integers(1, 500), SEED)
+    @settings(max_examples=20, deadline=None)
+    def test_roundtrip_dynamic(self, n, k, seed):
+        """Wire-format round-trip over the traced-k compressor (the fused
+        round's selection path)."""
+        k = min(k, n)
+        u = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+        c = C.topk_compress_dynamic(u, jnp.int32(k))
+        idx, vals = C.to_sparse(c, k)
+        dense = C.from_sparse(idx, vals, n)
+        np.testing.assert_allclose(np.asarray(dense), np.asarray(c.values),
+                                   rtol=1e-6)
+
+    @given(st.integers(128, 1500), st.integers(1, 4), SEED)
+    @settings(max_examples=15, deadline=None)
+    def test_roundtrip_block(self, n, kc, seed):
+        """Round-trip through the blockwise compressor (uneven tail block)."""
+        u = jax.random.normal(jax.random.PRNGKey(seed), (1, n))
+        ks = jnp.asarray([kc * 8], jnp.int32)
+        c = C.block_topk_compress_batch(u, ks, block=256)
+        kept = int(c.mask[0].sum())
+        idx, vals = C.to_sparse(C.Compressed(c.values[0], c.mask[0]), kept)
+        dense = C.from_sparse(idx, vals, n)
+        np.testing.assert_allclose(np.asarray(dense), np.asarray(c.values[0]),
+                                   rtol=1e-6)
+
     def test_overallocated_k(self):
         u = _vec(9, 256)
         c = C.topk_compress(u, 0.05)

@@ -52,6 +52,26 @@ class TestOverlap:
         assert f2 < f1
 
 
+class TestHistogram:
+    def test_matches_manual_loop(self):
+        _, masks = _sparse_updates(5, 3000, 0.1, seed=11)
+        hist = np.asarray(opwa.overlap_histogram(masks))
+        counts = np.asarray(opwa.overlap_counts(masks))
+        manual = np.array([np.sum(counts == c) for c in range(6)])
+        np.testing.assert_array_equal(hist, manual)
+
+    def test_sums_to_n(self):
+        _, masks = _sparse_updates(4, 2048, 0.2, seed=12)
+        hist = np.asarray(opwa.overlap_histogram(masks))
+        assert hist.sum() == 2048
+
+    def test_kmax_truncates(self):
+        """Degrees above k_max are dropped, not clipped into the last bin."""
+        masks = jnp.ones((5, 7), bool)   # every index has overlap 5
+        hist = np.asarray(opwa.overlap_histogram(masks, k_max=3))
+        np.testing.assert_array_equal(hist, [0, 0, 0, 0])
+
+
 class TestAggregate:
     def test_equals_manual(self):
         vals, masks = _sparse_updates(4, 1000, 0.1)
