@@ -1,6 +1,9 @@
-"""Round-engine benchmark: legacy per-client loop vs the fused jitted round.
+"""Round-engine benchmark: legacy per-client loop vs the fused jitted round,
+plus the multi-round dimension (fused per-round dispatch vs the ONE-compile
+``lax.scan`` simulation engine).
 
     PYTHONPATH=src python -m benchmarks.bench_round [--fast] [--out PATH]
+    PYTHONPATH=src python -m benchmarks.bench_round --sim-scan [--fast]
 
 For each (strategy, cohort size K) cell it runs the same seeded simulation
 through both engines, times steady-state rounds (first round excluded as
@@ -22,6 +25,18 @@ writes ``BENCH_round.json``:
 update; evaluation excluded); ``s_per_round_min`` the fastest such round.
 ``speedup`` = legacy min / fused min (scheduler noise only adds time, so
 per-engine minima give the stable ratio on shared CI hardware).
+
+``--sim-scan`` runs the multi-round benchmark instead and writes
+``BENCH_sim_scan.json``: for each (strategy, rounds) cell it times the fused
+per-round engine's steady-state round (median post-warmup wall) against the
+scan engine's per-round execution cost — the scan path AOT-compiles the
+whole trajectory, so wall/rounds of the compiled program excludes the
+one-off compile exactly like the fused numbers exclude warmup. The model is
+kept small so per-round *overhead* (Python dispatch, host staging), not
+local SGD, dominates — the regime the scan lowering targets. Compile counts
+must stay O(1) for both engines (recorded in the JSON). A ``ragged``
+section records the step-cap (``FLSimConfig.step_cap_quantile``) win under
+extreme Dirichlet skew.
 """
 from __future__ import annotations
 
@@ -155,16 +170,154 @@ def run(fast: bool = False, rounds: int = 0, out_path: str = "BENCH_round.json"
     return doc
 
 
+# ------------------------------------------------------- multi-round (scan)
+SCAN_STRATEGIES = ("bcrs_opwa", "eftopk")
+
+
+def _scan_sim_config(clients: int, rounds: int, **kw) -> FLSimConfig:
+    # dispatch-bound regime: tiny model + one local batch per client, so the
+    # per-round engine overhead (Python loop, staging, dispatch) dominates
+    # and the scan lowering's amortization is what gets measured
+    base = dict(n_clients=clients, participation=1.0, rounds=rounds,
+                dim=32, hidden=32, n_classes=10, batch_size=32,
+                n_train=64 * clients, n_test=128, noise=3.0,
+                eval_every=10_000, seed=7, beta=BENCH_BETA)
+    base.update(kw)
+    return FLSimConfig(**base)
+
+
+def bench_scan_cell(strategy: str, clients: int, rounds: int,
+                    warmup: int, cr: float) -> dict:
+    """Fused steady-state ms/round vs the scan engine's per-round execution
+    cost (``run_fl(engine="scan")`` AOT-compiles the trajectory and reports
+    wall/rounds of the compiled program — the one-off compile is excluded
+    exactly like the fused engine's discarded warmup rounds; the host plan
+    build is reported separately as ``s_total``)."""
+    from repro.fed import engine as engine_mod
+    acfg = AggregationConfig(strategy=strategy, cr=cr)
+    out = {"strategy": strategy, "clients": clients, "rounds": rounds}
+
+    with CompileCounter() as cc:
+        res_f = run_fl(_scan_sim_config(clients, rounds), acfg,
+                       engine="fused")
+    steady = res_f.wall_per_round[warmup:]
+    out["fused"] = {"s_per_round": statistics.median(steady),
+                    "s_per_round_min": min(steady),
+                    "compiles": cc.n}
+
+    traces0 = sum(engine_mod.TRACE_COUNTS.values())
+    with CompileCounter() as cc:
+        t0 = time.perf_counter()
+        res_s = run_fl(_scan_sim_config(clients, rounds), acfg,
+                       engine="scan")
+        total = time.perf_counter() - t0
+    out["scan"] = {"s_per_round": res_s.wall_per_round[0],
+                   "s_total": total, "compiles": cc.n,
+                   "sim_traces": (sum(engine_mod.TRACE_COUNTS.values())
+                                  - traces0)}
+    out["dispatch_overhead_ratio"] = (out["fused"]["s_per_round"]
+                                      / out["scan"]["s_per_round"])
+    out["accuracy_max_abs_diff"] = float(np.abs(
+        np.array([a for _, a in res_f.accuracies])
+        - np.array([a for _, a in res_s.accuracies])).max())
+    return out
+
+
+def bench_ragged(fast: bool, quantile: float = 0.5) -> dict:
+    """Step-cap datapoint: beta=0.1 Dirichlet skew makes the fused/scan
+    engines pad every client to the cohort-max local step count; capping at
+    the ``quantile`` of the per-client step distribution trades a little
+    tail-client local work for a much tighter static shape."""
+    from repro.fed.simulation import planned_client_steps
+    rounds = 6 if fast else 10
+    kw = dict(n_clients=8, participation=1.0, rounds=rounds, batch_size=32,
+              n_train=2400, n_test=128, dim=64, hidden=64, n_classes=10,
+              eval_every=10_000, seed=7, beta=0.1)
+    acfg = AggregationConfig(strategy="bcrs_opwa", cr=0.1)
+    out = {"beta": 0.1, "quantile": quantile, "rounds": rounds}
+    for label, q in (("uncapped", 1.0), ("capped", quantile)):
+        sim = FLSimConfig(**kw, step_cap_quantile=q)
+        steps = planned_client_steps(sim)
+        res = run_fl(sim, acfg, engine="fused")
+        steady = res.wall_per_round[2:]
+        out[label] = {
+            "s_per_round": statistics.median(steady),
+            "s_per_round_min": min(steady),
+            "s_max_steps": int(steps.max()),
+            "padded_step_frac": float(1.0 - steps.mean() / steps.max()),
+        }
+    out["speedup"] = (out["uncapped"]["s_per_round_min"]
+                      / out["capped"]["s_per_round_min"])
+    return out
+
+
+def run_sim_scan(fast: bool = False,
+                 out_path: str = "BENCH_sim_scan.json") -> dict:
+    clients = 8
+    rounds = 60 if fast else 120
+    warmup, cr = 2, 0.1
+    results = []
+    for strategy in SCAN_STRATEGIES:
+        cell = bench_scan_cell(strategy, clients, rounds, warmup, cr)
+        results.append(cell)
+        print(f"{strategy:>10} R={rounds:<4} "
+              f"fused {cell['fused']['s_per_round'] * 1e3:7.2f} ms/round "
+              f"({cell['fused']['compiles']:3d} compiles)  "
+              f"scan {cell['scan']['s_per_round'] * 1e3:7.2f} "
+              f"ms/round ({cell['scan']['sim_traces']} traces)  "
+              f"overhead ratio {cell['dispatch_overhead_ratio']:.2f}x  "
+              f"|dacc| {cell['accuracy_max_abs_diff']:.1e}")
+    ragged = bench_ragged(fast)
+    print(f"    ragged beta=0.1 cap@q{ragged['quantile']}: "
+          f"{ragged['uncapped']['s_per_round_min'] * 1e3:.1f} -> "
+          f"{ragged['capped']['s_per_round_min'] * 1e3:.1f} ms/round "
+          f"({ragged['speedup']:.2f}x; padded frac "
+          f"{ragged['uncapped']['padded_step_frac']:.2f} -> "
+          f"{ragged['capped']['padded_step_frac']:.2f})")
+    doc = {
+        "schema": "bench_sim_scan/v1",
+        "env": {"platform": jax.devices()[0].platform,
+                "jax": jax.__version__,
+                "cpu_count": os.cpu_count()},
+        "config": {"clients": clients, "rounds": rounds,
+                   "warmup": warmup, "cr": cr, "fast": fast},
+        "results": results,
+        "ragged": ragged,
+    }
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"wrote {out_path}")
+    return doc
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="K in {8,16}, fewer rounds (CI-speed)")
     ap.add_argument("--rounds", type=int, default=0)
     ap.add_argument("--out", default="BENCH_round.json")
+    ap.add_argument("--sim-scan", action="store_true",
+                    help="run the multi-round benchmark (fused per-round "
+                         "dispatch vs the one-compile scan engine) and "
+                         "write BENCH_sim_scan.json")
     ap.add_argument("--check", action="store_true",
                     help="exit nonzero unless fused beats legacy >=3x at "
-                         "K=16 bcrs_opwa")
+                         "K=16 bcrs_opwa (with --sim-scan: scan dispatch "
+                         "overhead >=2x lower than fused)")
     args = ap.parse_args()
+    if args.sim_scan:
+        out = ("BENCH_sim_scan.json" if args.out == "BENCH_round.json"
+               else args.out)
+        doc = run_sim_scan(fast=args.fast, out_path=out)
+        if args.check:
+            bad = [c for c in doc["results"]
+                   if c["dispatch_overhead_ratio"] < 2.0]
+            if bad:
+                print(f"FAIL: dispatch overhead ratio < 2x in "
+                      f"{[c['strategy'] for c in bad]}")
+                return 1
+            print("OK: scan dispatch overhead >=2x lower than fused")
+        return 0
     doc = run(fast=args.fast, rounds=args.rounds, out_path=args.out)
     if args.check:
         cell = next(r for r in doc["results"]

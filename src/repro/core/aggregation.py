@@ -80,6 +80,19 @@ def ks_for_schedule(n: int, crs: np.ndarray, acfg: AggregationConfig
                       np.int32)
 
 
+def overlap_ks(acfg: AggregationConfig, info: dict, k: int, n: int
+               ) -> np.ndarray:
+    """Per-client GLOBAL top-k counts for the Fig. 4 overlap instrumentation
+    (mirrors the legacy host-side fallback): schedule CRs when the strategy
+    has them, else the configured CR* — fedavg's schedule crs are all-ones
+    and would make the histogram degenerate. Shared by the fused round
+    server and the scan plan builder so the two engines' histograms agree
+    structurally."""
+    crs_overlap = info.get("crs", np.full(k, acfg.cr))
+    return np.asarray([comp.k_for_ratio(n, float(c)) for c in crs_overlap],
+                      np.int32)
+
+
 # ------------------------------------------------------- client compression
 def _compress_fn(acfg: AggregationConfig):
     if acfg.block_topk:

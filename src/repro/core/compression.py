@@ -88,6 +88,12 @@ def topk_compress_dynamic(u: jax.Array, k: jax.Array,
     regardless of scale (a value-space bisection needs ~40 iterations and
     still loses exactness when the threshold is denormal-small, e.g. CR→1).
     The mask equals the exact ``|u| >= k-th largest`` selection (ties kept).
+
+    This is the ONE Top-K selection in the tree — every engine (fused round,
+    scanned simulation, mesh round, pod sync) routes here through
+    ``repro.fed.engine``. Rank-agnostic: reductions run over ALL axes of
+    ``u``, so a leaf in its natural (possibly TP-sharded) layout selects
+    without being reshaped or gathered.
     """
     mag = jnp.abs(u.astype(jnp.float32))
     bits = jax.lax.bitcast_convert_type(mag, jnp.uint32)

@@ -45,18 +45,25 @@ def overlap_histogram(masks: jax.Array, k_max: Optional[int] = None
 def opwa_aggregate(updates: jax.Array, masks: jax.Array, coeffs: jax.Array,
                    gamma: float, d: int = 1,
                    use_kernel="auto") -> jax.Array:
-    """Fused OPWA aggregation.
+    """Fused OPWA aggregation (rank-agnostic).
 
-    updates: [K, n] dense-masked sparse updates; masks: [K, n] bool;
-    coeffs: [K] client coefficients p'_i. Returns M ⊙ Σ_i p'_i u_i  [n].
+    updates: [K, *shape] dense-masked sparse updates (flat [K, n] from the
+    round engines, natural possibly-sharded leaf layout from the mesh/pod
+    adapters); masks: matching bool; coeffs: [K] client coefficients p'_i.
+    Returns M ⊙ Σ_i p'_i u_i  [*shape]. The Pallas kernel route applies to
+    the flat [K, n] layout only.
     """
-    if resolve_use_kernel(use_kernel):
+    if resolve_use_kernel(use_kernel) and updates.ndim == 2:
         from repro.kernels import ops as kops
         return kops.overlap_combine(updates, masks, coeffs, gamma, d)
     counts = overlap_counts(masks)
     m = opwa_mask(counts, gamma, d)
-    weighted = jnp.einsum("k,kn->n", coeffs.astype(jnp.float32),
-                          updates.astype(jnp.float32))
+    if updates.ndim == 2:
+        weighted = jnp.einsum("k,kn->n", coeffs.astype(jnp.float32),
+                              updates.astype(jnp.float32))
+    else:
+        weighted = jnp.tensordot(coeffs.astype(jnp.float32),
+                                 updates.astype(jnp.float32), axes=(0, 0))
     return m * weighted
 
 

@@ -13,7 +13,10 @@ Top-K at the BCRS-scheduled traced ratios (``pod_crs``, clipped to the
 ``wire_cr`` budget; ``repro.core.bcrs.pod_link_schedule`` produces them from
 heterogeneous DCN links), merged with overlap-weighted averaging
 (``repro.core.opwa`` — coords kept by <= ``overlap_d`` pods are amplified by
-``gamma``). At ``wire_cr=1.0`` every pod keeps everything, overlap saturates,
+``gamma``). Compression + EF + merge run through the shared substrate
+(``repro.fed.engine.compress_merge_leaf`` -> the one
+``topk_compress_dynamic`` bisection), the same pipeline the FL round
+engines use. At ``wire_cr=1.0`` every pod keeps everything, overlap saturates,
 and the step reproduces ``make_train_step`` exactly (strict generalization —
 see tests/test_dist.py).
 
@@ -32,8 +35,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.compression import topk_compress_dynamic
-from repro.core.opwa import opwa_aggregate
+from repro.core.compression import resolve_use_kernel
+from repro.fed.engine import compress_merge_leaf
 
 Metrics = Dict[str, jax.Array]
 
@@ -121,8 +124,7 @@ def make_compressed_train_step(model, opt, *, n_pods: int,
         # so OPWA would silently scale all gradients by gamma (an LR change,
         # not a sync strategy) — use make_train_step instead
         raise ValueError(f"n_pods must be >= 2, got {n_pods}")
-    if use_kernel == "auto":
-        use_kernel = jax.devices()[0].platform == "tpu"
+    use_kernel = resolve_use_kernel(use_kernel)
     grad_fn = _grad_fn(model)
 
     def step(params, opt_state, batch, pod_crs, pod_coeffs):
@@ -157,12 +159,10 @@ def make_compressed_train_step(model, opt, *, n_pods: int,
             if n < min_leaf_size:  # dense exchange, no EF
                 return (jnp.tensordot(coeffs, gf, axes=(0, 0))
                         .reshape(g.shape[1:]), e)
-            corrected = e.reshape(n_pods, n) + gf
             ks = jnp.clip(jnp.round(crs * n).astype(jnp.int32), 1, n)
-            comp = jax.vmap(topk_compress_dynamic)(corrected, ks)
-            new_e = corrected - comp.values
-            agg = opwa_aggregate(comp.values, comp.mask, coeffs, gamma,
-                                 d=overlap_d, use_kernel=use_kernel)
+            agg, new_e = compress_merge_leaf(
+                gf, coeffs, ks, gamma=gamma, overlap_d=overlap_d, opwa=True,
+                use_kernel=use_kernel, residuals=e.reshape(n_pods, n))
             return agg.reshape(g.shape[1:]), new_e.reshape(e.shape)
 
         pairs = jax.tree.map(sync_leaf, grads, ef)

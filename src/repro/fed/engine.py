@@ -1,0 +1,408 @@
+"""One compression/aggregation substrate for every FL round engine.
+
+Before this module the repo carried three divergent implementations of
+"compress each client's update, then merge": the fused round program
+(``fed.round_step``), the mesh-parallel round's inline float-space bisection
+(``fed.mesh_round``), and the compressed pod sync (``dist.grad_sync``). They
+are now thin adapters over the pure functions here:
+
+  * ``ClientUpdateSpec``      — static description of the client-update
+                                pipeline (strategy, block/kernel routing,
+                                OPWA constants), derived from an
+                                ``AggregationConfig`` via ``spec_for``;
+  * ``aggregate_updates``     — flat-space path: [C, n] stacked updates ->
+                                traced-k compression (integer-bit bisection),
+                                batched error feedback, OPWA/weighted merge.
+                                Used by the fused per-round program and the
+                                scanned simulation;
+  * ``compress_merge_leaf``   — per-leaf path: [C, *shape] updates in their
+                                natural (possibly TP-sharded) layout. The
+                                bisection reduces over the non-client axes,
+                                so sharded leaves stay sharded. Used by
+                                ``mesh_round`` and ``grad_sync``;
+  * ``make_sim_scan``         — the fourth entry point: the ENTIRE
+                                multi-round simulation lowered into one
+                                ``lax.scan`` over rounds (server flat params
+                                + EF residuals threaded as carry, host-
+                                precomputed per-round schedules as xs).
+                                ONE compile per simulation, zero per-round
+                                dispatch.
+
+Every Top-K selection in the tree routes through
+``core.compression.topk_compress_dynamic`` — there is exactly one
+implementation of the bisection.
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compression as comp
+from repro.core import opwa as opwa_mod
+from repro.models import flags
+
+#: module-wide retrace telemetry for the scanned simulation:
+#: ("sim_scan", strategy, with_overlap) -> number of traces. A simulation is
+#: O(1)-compile iff this stays at 1 regardless of rounds/clients (asserted in
+#: tests/test_sim_scan.py).
+TRACE_COUNTS: collections.Counter = collections.Counter()
+
+STRATEGIES = ("fedavg", "topk", "eftopk", "bcrs", "bcrs_opwa")
+
+
+# ------------------------------------------------------------------- spec
+@dataclass(frozen=True)
+class ClientUpdateSpec:
+    """Static (trace-time) description of the per-client update pipeline:
+    compress (traced-k Top-K / blockwise / EF) -> OPWA or weighted merge.
+    All runtime quantities (per-client retained counts ``ks``, weights,
+    residuals) stay traced arguments of the functions below."""
+    strategy: str = "fedavg"
+    cr: float = 0.1                # static CR* (only the EF Pallas kernel
+    block_topk: bool = False       # needs it — everything else is traced)
+    block_size: int = 8192
+    gamma: float = 5.0
+    overlap_d: int = 1
+    use_kernel: bool = False       # resolved bool (never "auto")
+
+    def __post_init__(self):
+        if self.strategy not in STRATEGIES:
+            raise ValueError(f"unknown strategy {self.strategy!r}")
+
+    @property
+    def needs_residuals(self) -> bool:
+        return self.strategy == "eftopk"
+
+    @property
+    def use_ef_kernel(self) -> bool:
+        # the fused EF Pallas kernel selects per block at a static k — only a
+        # faithful route when the config already asks for block top-k; global
+        # top-k configs stay on the traced-k path so TPU matches CPU/legacy
+        return self.use_kernel and self.block_topk
+
+
+def spec_for(acfg) -> ClientUpdateSpec:
+    """AggregationConfig -> ClientUpdateSpec (resolves use_kernel="auto")."""
+    return ClientUpdateSpec(
+        strategy=acfg.strategy, cr=acfg.cr, block_topk=acfg.block_topk,
+        block_size=acfg.block_size, gamma=acfg.gamma,
+        overlap_d=acfg.overlap_d,
+        use_kernel=comp.resolve_use_kernel(acfg.use_kernel))
+
+
+def compress_batch_fn(spec: ClientUpdateSpec) -> Callable:
+    """Batched traced-k compressor for the spec: [C, n], ks [C] -> Compressed."""
+    if spec.block_topk:
+        return lambda u, ks: comp.block_topk_compress_batch(
+            u, ks, block=spec.block_size)
+    return comp.topk_compress_batch
+
+
+# ------------------------------------------------------------- flat <-> tree
+def _leaf_specs(params_template):
+    leaves, treedef = jax.tree.flatten(params_template)
+    specs = [(l.shape, l.dtype, int(np.prod(l.shape, dtype=np.int64)))
+             for l in leaves]
+    return treedef, specs, int(sum(s for _, _, s in specs))
+
+
+def make_unflatten(params_template) -> Callable:
+    """[n] flat f32 -> pytree shaped/dtyped like ``params_template`` (same
+    leaf order as ``ravel_pytree``, so it round-trips with ``flatten_tree``)."""
+    treedef, specs, n = _leaf_specs(params_template)
+
+    def unflatten(flat):
+        out, off = [], 0
+        for shape, dtype, size in specs:
+            out.append(flat[off:off + size].reshape(shape).astype(dtype))
+            off += size
+        return jax.tree.unflatten(treedef, out)
+
+    return unflatten
+
+
+def flatten_client_trees(deltas) -> jax.Array:
+    """pytree with leading [C, ...] leaves -> [C, n] f32, ravel order."""
+    leaves = jax.tree.leaves(deltas)
+    return jnp.concatenate(
+        [l.reshape(l.shape[0], -1).astype(jnp.float32) for l in leaves],
+        axis=1)
+
+
+# ----------------------------------------------------------- masked trainer
+def make_masked_local_trainer(loss_fn: Callable, lr: float):
+    """``local_train(params, batches, step_mask) -> (delta, last_loss)``.
+
+    Same SGD arithmetic as ``fed.client.make_local_trainer`` but scans a
+    *fixed* number of padded steps; steps with ``step_mask`` False leave the
+    parameters untouched, so clients with fewer real steps match the ragged
+    sequential loop bit-for-bit while keeping one static shape for vmap.
+    The reported loss is the pre-update loss of the last real step (one
+    forward pass per step via value_and_grad — the legacy trainer's
+    post-update loss recompute is a third of its step FLOPs and feeds
+    nothing downstream; the deltas are unaffected).
+    """
+    vg_fn = jax.value_and_grad(lambda p, b: loss_fn(p, b)[0])
+
+    def sgd_step(carry, xs):
+        params, last_loss = carry
+        batch, m = xs
+        loss, grads = vg_fn(params, batch)
+        new = jax.tree.map(
+            lambda p, g: (p - lr * g.astype(p.dtype)).astype(p.dtype),
+            params, grads)
+        new = jax.tree.map(lambda a, b: jnp.where(m, a, b), new, params)
+        loss = jnp.where(m, loss, last_loss)
+        return (new, loss), None
+
+    def local_train(params, batches, step_mask):
+        n_steps = jax.tree.leaves(batches)[0].shape[0]
+        (final, loss), _ = jax.lax.scan(
+            sgd_step, (params, jnp.float32(0.0)), (batches, step_mask),
+            unroll=flags.scan_unroll(n_steps))
+        delta = jax.tree.map(lambda a, b: (a - b).astype(a.dtype),
+                             params, final)
+        return delta, loss
+
+    return local_train
+
+
+# -------------------------------------------------------- EF Pallas routing
+def ef_kernel_step(spec: ClientUpdateSpec, updates: jax.Array,
+                   residuals: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Clients-as-rows fused EF Pallas step (uniform static CR)."""
+    from repro.kernels.ef_update import ROWS_TILE, ef_update_pallas
+    from repro.kernels.ops import _interpret
+    c, n = updates.shape
+    block = spec.block_size
+    kb = comp.k_for_ratio(block, spec.cr)
+    n_pad = (-n) % block
+    g = jnp.pad(updates, ((0, 0), (0, n_pad)))
+    e = jnp.pad(residuals, ((0, 0), (0, n_pad)))
+    nb = g.shape[1] // block
+    g2d = g.reshape(c * nb, block)
+    e2d = e.reshape(c * nb, block)
+    rpad = (-(c * nb)) % ROWS_TILE
+    if rpad:
+        g2d = jnp.pad(g2d, ((0, rpad), (0, 0)))
+        e2d = jnp.pad(e2d, ((0, rpad), (0, 0)))
+    send, new_e = ef_update_pallas(g2d, e2d, kb, interpret=_interpret())
+    send = send[:c * nb].reshape(c, nb * block)[:, :n]
+    new_e = new_e[:c * nb].reshape(c, nb * block)[:, :n]
+    return send, new_e
+
+
+# ------------------------------------------------------------ flat-space path
+def aggregate_updates(spec: ClientUpdateSpec, updates: jax.Array,
+                      weights: jax.Array, ks: jax.Array,
+                      residuals: Optional[jax.Array] = None,
+                      active: Optional[jax.Array] = None
+                      ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Compress + merge stacked flat client updates (pure, jit/vmap-safe).
+
+    updates [C, n] f32; weights [C] (data fracs or BCRS Eq. 6 coefficients);
+    ks [C] i32 traced retained counts (per block when ``spec.block_topk``);
+    residuals [C, n] EF state (required iff ``spec.needs_residuals``);
+    active: optional bool [C] — inactive rows (padded cohort slots in the
+    scanned simulation) contribute nothing to the merge or the OPWA overlap
+    counts, and their residuals pass through unchanged. Active rows are
+    multiplied by 1.0 / masked with True, so the no-mask arithmetic is
+    preserved bit-for-bit.
+
+    Returns (agg [n] f32, new_residuals | None).
+    """
+    w = weights.astype(jnp.float32)
+    compress = compress_batch_fn(spec)
+    mask = None
+    new_res = residuals
+
+    if spec.strategy == "fedavg":
+        vals = updates
+    elif spec.strategy == "eftopk":
+        if residuals is None:
+            raise ValueError("eftopk needs residuals")
+        if spec.use_ef_kernel:
+            vals, new_res = ef_kernel_step(spec, updates, residuals)
+        else:
+            c_obj, new_res = comp.ef_compress_batch(
+                residuals, updates, ks, compress_batch=compress)
+            vals, mask = c_obj.values, c_obj.mask
+        if active is not None:
+            new_res = jnp.where(active[:, None], new_res, residuals)
+    else:  # topk | bcrs | bcrs_opwa
+        c_obj = compress(updates, ks)
+        vals, mask = c_obj.values, c_obj.mask
+
+    if active is not None:
+        # padded rows are all-zero updates, but a Top-K mask over zeros is
+        # all-True (ties at the threshold) — force them out of the overlap
+        # counts and the merge
+        vals = vals * active[:, None]
+        if mask is not None:
+            mask = mask & active[:, None]
+
+    if spec.strategy == "bcrs_opwa":
+        agg = opwa_mod.opwa_aggregate(vals, mask, w, spec.gamma,
+                                      spec.overlap_d,
+                                      use_kernel=spec.use_kernel)
+    else:
+        agg = jnp.einsum("k,kn->n", w, vals.astype(jnp.float32))
+    return agg, new_res
+
+
+# ------------------------------------------------------------- per-leaf path
+def compress_merge_leaf(updates: jax.Array, coeffs: jax.Array, ks: jax.Array,
+                        *, gamma: float = 1.0, overlap_d: int = 1,
+                        opwa: bool = True, use_kernel: bool = False,
+                        residuals: Optional[jax.Array] = None
+                        ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Compress + merge ONE leaf in its natural layout.
+
+    updates: [C, *shape] per-client (or per-pod) leaf updates — the bisection
+    Top-K reduces over all non-client axes, so a TP-sharded leaf never gets
+    reshaped/gathered (see mesh_round). coeffs [C]; ks [C] i32 traced.
+    ``residuals`` (matching [C, *shape], f32) switches on error feedback.
+    ``opwa=False`` skips the overlap mask (plain weighted merge of the
+    compressed values).
+
+    Returns (agg [*shape] f32, new_residuals | None).
+    """
+    w = coeffs.astype(jnp.float32)
+    x = updates.astype(jnp.float32)
+    if residuals is not None:
+        x = residuals + x
+    c_obj = jax.vmap(comp.topk_compress_dynamic)(x, ks)
+    new_res = (x - c_obj.values) if residuals is not None else None
+    if opwa:
+        agg = opwa_mod.opwa_aggregate(c_obj.values, c_obj.mask, w, gamma,
+                                      overlap_d, use_kernel=use_kernel)
+    else:
+        agg = jnp.tensordot(w, c_obj.values, axes=(0, 0))
+    return agg, new_res
+
+
+# ---------------------------------------------------------- scanned simulation
+class SimScan:
+    """Callable wrapper around the jitted whole-simulation scan program."""
+
+    def __init__(self, fn, spec: ClientUpdateSpec, with_overlap: bool):
+        self._fn = fn
+        self.spec = spec
+        self.with_overlap = with_overlap
+
+    def __call__(self, flat, residuals, xs):
+        return self._fn(flat, residuals, xs)
+
+    def compile(self, flat, residuals, xs):
+        """AOT lower+compile for the given arguments. The returned compiled
+        executable lets callers separate the one-off trace/compile cost from
+        steady-state execution (``benchmarks.bench_round --sim-scan`` times
+        the executable alone)."""
+        return self._fn.lower(flat, residuals, xs).compile()
+
+
+def make_sim_scan(loss_fn: Callable, params_template, *, lr: float,
+                  acfg, eta: float = 1.0, with_overlap: bool = False,
+                  make_batches: Optional[Callable] = None,
+                  plan_fn: Optional[Callable] = None) -> SimScan:
+    """Lower the ENTIRE multi-round FL simulation into one ``lax.scan``.
+
+    Where ``round_step.make_round_step`` compiles one round and Python
+    dispatches it R times, this compiles the R-round trajectory into a single
+    program: the server's flat params and EF residuals thread through the
+    scan carry, and everything the host scheduler decides per round (cohort
+    composition, BCRS CR schedules, failure/straggler survivors) arrives as
+    stacked ``[R, ...]`` scan xs. One compile, zero per-round dispatch.
+
+    Returned program signature (flat and residuals donated)::
+
+        sim(flat [n] f32,
+            residuals [C, n] f32 ([0] when the strategy carries no EF),
+            xs: {
+              "step_mask"  [R, C, S] bool,   # padded-step validity
+              "active"     [R, C]    bool,   # padded cohort-slot validity
+              "weights"    [R, C]    f32,    # 0 at inactive slots
+              "ks"         [R, C]    i32,
+              "reset_ef"   [R]       bool,   # eftopk only: cohort resized
+              + whatever ``make_batches`` consumes (default: "batches", a
+                pytree of [R, C, S, ...] stacked client batches; the
+                simulation harness passes [R, C, S, B] sample indices and a
+                gather closure instead, which is ~250x smaller host->device),
+              + with_overlap: "ks_overlap" [R, C] i32, "overlap_round" [R]
+            })
+        -> {"flat": [n], "residuals": [C, n],
+            "ys": {"flat" [R, n], "loss" [R][, "overlap_counts" [R, n]]}}
+
+    ``ys["flat"][r]`` is the server model AFTER round r — the host picks its
+    eval rounds from it, so the accuracy trajectory is computed by the exact
+    same jitted eval as the per-round engines.
+
+    Rounds skipped by failure injection (empty cohort) should simply not be
+    included in the xs — the carry is untouched by construction, which
+    matches the per-round engines' ``continue``.
+
+    ``plan_fn`` (optional) maps each raw xs slice to the per-round plan dict
+    consumed above — the hook that lets cohort sampling, survival draws, and
+    straggler arrivals run fully *inside* the jit from a threaded PRNG key
+    (``simulation.run_fl_traced``) instead of arriving host-precomputed.
+    When a traced plan omits "reset_ef", EF residuals are never reset (the
+    traced stream has its own slot semantics).
+    """
+    spec = spec_for(acfg)
+    unflatten = make_unflatten(params_template)
+    local_train = make_masked_local_trainer(loss_fn, lr)
+    get_batches = make_batches or (lambda x: x["batches"])
+    ef = spec.needs_residuals
+
+    def body(carry, x):
+        flat, res = carry
+        p = plan_fn(x) if plan_fn is not None else x
+        params = unflatten(flat)
+        deltas, losses = jax.vmap(local_train, in_axes=(None, 0, 0))(
+            params, get_batches(p), p["step_mask"])
+        updates = flatten_client_trees(deltas)     # [C, n] f32
+        active = p["active"]
+
+        res_in = res
+        if ef and "reset_ef" in p:
+            res_in = jnp.where(p["reset_ef"], jnp.zeros_like(res), res)
+        agg, new_res = aggregate_updates(
+            spec, updates, p["weights"], p["ks"],
+            residuals=res_in if ef else None, active=active)
+        new_flat = flat - eta * agg
+
+        n_act = jnp.maximum(jnp.sum(active.astype(jnp.int32)), 1)
+        loss = jnp.sum(jnp.where(active, losses, 0.0)) / n_act
+        ys = {"flat": new_flat, "loss": loss}
+        # a traced plan_fn can surface per-round plan facts (e.g. the in-jit
+        # sampled cohort) to the host via "ys_extra"
+        if "ys_extra" in p:
+            ys.update(p["ys_extra"])
+        if with_overlap:
+            # Fig. 4 instrumentation: global top-k masks on the RAW deltas,
+            # computed only on the flagged round (cond skips the work
+            # everywhere else)
+            def counts_fn(args):
+                u, ko, act = args
+                m = comp.topk_compress_batch(u, ko).mask & act[:, None]
+                return opwa_mod.overlap_counts(m)
+
+            ys["overlap_counts"] = jax.lax.cond(
+                p["overlap_round"], counts_fn,
+                lambda args: jnp.zeros((updates.shape[1],), jnp.int32),
+                (updates, p["ks_overlap"], active))
+        return (new_flat, new_res if ef else res), ys
+
+    def _sim(flat, residuals, xs):
+        # host side effect: runs only at trace time
+        TRACE_COUNTS[("sim_scan", spec.strategy, with_overlap)] += 1
+        (flat, residuals), ys = jax.lax.scan(body, (flat, residuals), xs)
+        return {"flat": flat, "residuals": residuals, "ys": ys}
+
+    fn = jax.jit(_sim, donate_argnums=(0, 1))
+    return SimScan(fn, spec, with_overlap)

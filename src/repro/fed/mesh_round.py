@@ -3,20 +3,25 @@ model TP-sharded over ``model``, aggregation via sharded reductions (psum in
 the compiled HLO). This is the paper's system as a first-class distributed
 feature — the dry-run lowers this step for the paper-representative cells.
 
-Per-client compression uses the traced-k bisection Top-K so BCRS can assign
-*different* CRs per client inside one compiled step. Per-leaf selection (vs
-the host-loop simulator's whole-model flatten) keeps every tensor sharded;
-see DESIGN.md §7.
+Thin adapter over ``repro.fed.engine``: per-client selection routes through
+the shared traced-k integer-bit bisection (``core.compression.
+topk_compress_dynamic``) via ``engine.compress_merge_leaf`` — the private
+float-space bisection this module used to carry is gone (it needed ~40
+iterations, lost exactness near denormal thresholds, and kept ties
+inconsistently with the other engines; the integer-bit bisection is exact in
+<= 32 halvings including the CR=1 / k=n edge). Per-leaf selection (vs the
+host-loop simulator's whole-model flatten) keeps every tensor sharded; see
+DESIGN.md §7.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.compression import topk_compress_dynamic
 from repro.fed.client import make_local_trainer
+from repro.fed.engine import compress_merge_leaf
 
 
 def make_fl_round_step(model, *, lr_local: float = 1e-2, eta: float = 1.0,
@@ -39,31 +44,15 @@ def make_fl_round_step(model, *, lr_local: float = 1e-2, eta: float = 1.0,
             aggregation operate on the leaf's natural (TP-sharded) layout —
             reshape(c, -1) would merge sharded dims and force XLA to gather
             the whole leaf per device (§Perf iteration 1)."""
-            c = dl.shape[0]
-            axes = tuple(range(1, dl.ndim))
-            n = dl.size // c
-            cexp = (slice(None),) + (None,) * (dl.ndim - 1)
-            magf = jnp.abs(dl.astype(jnp.float32))
             if compress:
-                k = jnp.maximum((crs * n).astype(jnp.int32), 1)
-                hi = jnp.max(magf, axis=axes)
-                lo = jnp.zeros_like(hi)
-
-                def body(_, lohi):
-                    lo, hi = lohi
-                    mid = 0.5 * (lo + hi)
-                    cnt = jnp.sum(magf >= mid[cexp], axis=axes)
-                    pred = cnt >= k
-                    return jnp.where(pred, mid, lo), jnp.where(pred, hi, mid)
-
-                lo, _ = jax.lax.fori_loop(0, 40, body, (lo, hi))
-                mask = magf >= lo[cexp]
-                vals = jnp.where(mask, dl.astype(jnp.float32), 0.0)
-                counts = jnp.sum(mask.astype(jnp.int32), axis=0)
-                m = jnp.where((counts > 0) & (counts <= overlap_d),
-                              jnp.float32(gamma), jnp.float32(1.0))
-                agg = m * jnp.tensordot(coeffs.astype(jnp.float32), vals,
-                                        axes=(0, 0))
+                n = dl.size // dl.shape[0]
+                # same rounding as the host scheduler's k_for_ratio, clamped
+                # to [1, n] so CR=1 keeps the whole leaf exactly
+                ks = jnp.clip(jnp.round(crs.astype(jnp.float32) * n)
+                              .astype(jnp.int32), 1, n)
+                agg, _ = compress_merge_leaf(dl, coeffs, ks, gamma=gamma,
+                                             overlap_d=overlap_d, opwa=True,
+                                             use_kernel=False)
             else:
                 agg = jnp.tensordot(coeffs.astype(jnp.float32),
                                     dl.astype(jnp.float32), axes=(0, 0))

@@ -1,11 +1,11 @@
-"""Fused FL round: ONE jitted program per simulation (paper Alg. 1 hot path).
+"""Fused FL round: ONE jitted program per round (paper Alg. 1 hot path).
 
-The legacy harness dispatches ``local_train`` once per client from Python,
-compresses each client at a *static* CR (re-lowering ``lax.top_k`` for every
-distinct BCRS ratio: O(rounds × K) XLA compiles), restacks pytrees on host,
-and applies the server update eagerly. This module collapses local training,
-compression, error feedback, OPWA aggregation, and the server update into a
-single compiled round:
+Thin adapter over the shared substrate in ``repro.fed.engine``: the masked
+vmapped local trainer, traced-k compression, batched EF, OPWA merge, and the
+server update all come from there — this module only assembles them into the
+per-round program and owns its retrace telemetry. The whole-simulation
+``lax.scan`` lowering lives in ``engine.make_sim_scan``; the legacy eager
+loop stays in ``fed.server.FLServer.round``.
 
   * clients are stacked on a leading axis and the local trainer is vmapped;
     ragged per-client step counts are handled with a step mask (padded steps
@@ -15,7 +15,9 @@ single compiled round:
   * on TPU the EF step runs through the fused ``ef_update`` Pallas kernel
     and OPWA through ``overlap_combine`` (CPU/GPU interpret or XLA paths);
   * the server update ``w ← w − η·agg`` happens inside the same jit with the
-    flat parameter and residual buffers donated.
+    flat parameter and residual buffers donated; the stacked client batch
+    buffers are re-staged every round by the harness's double-buffered
+    prefetch (round r+1 transfers while round r computes).
 
 Per-round *scalars* (BCRS CRs, Eq. 6 coefficients, retained counts) stay
 host-scheduled numpy — they enter as traced [K] inputs, never as static args.
@@ -27,86 +29,19 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import aggregation as agg_mod
 from repro.core import compression as comp
 from repro.core import opwa as opwa_mod
-from repro.models import flags
+from repro.fed import engine
+# re-exported for API stability (previous home of these helpers)
+from repro.fed.engine import (flatten_client_trees, make_masked_local_trainer,
+                              make_unflatten)
 
 #: module-wide retrace telemetry: (strategy, with_overlap) -> number of times
 #: a fused round step was traced. A simulation is O(1)-compile iff this stays
 #: constant as rounds/clients grow (asserted in tests/test_round_step.py).
 TRACE_COUNTS: collections.Counter = collections.Counter()
-
-
-# ------------------------------------------------------------- flat <-> tree
-def _leaf_specs(params_template):
-    leaves, treedef = jax.tree.flatten(params_template)
-    specs = [(l.shape, l.dtype, int(np.prod(l.shape, dtype=np.int64)))
-             for l in leaves]
-    return treedef, specs, int(sum(s for _, _, s in specs))
-
-
-def make_unflatten(params_template) -> Callable:
-    """[n] flat f32 -> pytree shaped/dtyped like ``params_template`` (same
-    leaf order as ``ravel_pytree``, so it round-trips with ``flatten_tree``)."""
-    treedef, specs, n = _leaf_specs(params_template)
-
-    def unflatten(flat):
-        out, off = [], 0
-        for shape, dtype, size in specs:
-            out.append(flat[off:off + size].reshape(shape).astype(dtype))
-            off += size
-        return jax.tree.unflatten(treedef, out)
-
-    return unflatten
-
-
-def flatten_client_trees(deltas) -> jax.Array:
-    """pytree with leading [C, ...] leaves -> [C, n] f32, ravel order."""
-    leaves = jax.tree.leaves(deltas)
-    return jnp.concatenate(
-        [l.reshape(l.shape[0], -1).astype(jnp.float32) for l in leaves],
-        axis=1)
-
-
-# ----------------------------------------------------------- masked trainer
-def make_masked_local_trainer(loss_fn: Callable, lr: float):
-    """``local_train(params, batches, step_mask) -> (delta, last_loss)``.
-
-    Same SGD arithmetic as ``fed.client.make_local_trainer`` but scans a
-    *fixed* number of padded steps; steps with ``step_mask`` False leave the
-    parameters untouched, so clients with fewer real steps match the ragged
-    sequential loop bit-for-bit while keeping one static shape for vmap.
-    The reported loss is the pre-update loss of the last real step (one
-    forward pass per step via value_and_grad — the legacy trainer's
-    post-update loss recompute is a third of its step FLOPs and feeds
-    nothing downstream; the deltas are unaffected).
-    """
-    vg_fn = jax.value_and_grad(lambda p, b: loss_fn(p, b)[0])
-
-    def sgd_step(carry, xs):
-        params, last_loss = carry
-        batch, m = xs
-        loss, grads = vg_fn(params, batch)
-        new = jax.tree.map(
-            lambda p, g: (p - lr * g.astype(p.dtype)).astype(p.dtype),
-            params, grads)
-        new = jax.tree.map(lambda a, b: jnp.where(m, a, b), new, params)
-        loss = jnp.where(m, loss, last_loss)
-        return (new, loss), None
-
-    def local_train(params, batches, step_mask):
-        n_steps = jax.tree.leaves(batches)[0].shape[0]
-        (final, loss), _ = jax.lax.scan(
-            sgd_step, (params, jnp.float32(0.0)), (batches, step_mask),
-            unroll=flags.scan_unroll(n_steps))
-        delta = jax.tree.map(lambda a, b: (a - b).astype(a.dtype),
-                             params, final)
-        return delta, loss
-
-    return local_train
 
 
 # -------------------------------------------------------------- fused round
@@ -143,44 +78,10 @@ def make_round_step(loss_fn: Callable, params_template, *, lr: float,
                                       # overlap counts (overlap variant only)
         -> {"flat", "residuals", "loss"[, "overlap_counts"]}
     """
-    strategy = acfg.strategy
-    if strategy not in ("fedavg", "topk", "eftopk", "bcrs", "bcrs_opwa"):
-        raise ValueError(f"unknown strategy {strategy!r}")
-    use_kernel = comp.resolve_use_kernel(acfg.use_kernel)
-    # the fused EF Pallas kernel selects per block at a static k — only a
-    # faithful route when the config already asks for block top-k; global
-    # top-k configs stay on the traced-k path so TPU matches CPU/legacy
-    use_ef_kernel = use_kernel and acfg.block_topk
-    unflatten = make_unflatten(params_template)
-    local_train = make_masked_local_trainer(loss_fn, lr)
-    if acfg.block_topk:
-        def compress_batch(u, ks):
-            return comp.block_topk_compress_batch(u, ks,
-                                                  block=acfg.block_size)
-    else:
-        compress_batch = comp.topk_compress_batch
-
-    def ef_kernel_step(updates, residuals):
-        """Clients-as-rows fused EF Pallas step (uniform static CR)."""
-        from repro.kernels.ef_update import ROWS_TILE, ef_update_pallas
-        from repro.kernels.ops import _interpret
-        c, n = updates.shape
-        block = acfg.block_size
-        kb = comp.k_for_ratio(block, acfg.cr)
-        n_pad = (-n) % block
-        g = jnp.pad(updates, ((0, 0), (0, n_pad)))
-        e = jnp.pad(residuals, ((0, 0), (0, n_pad)))
-        nb = g.shape[1] // block
-        g2d = g.reshape(c * nb, block)
-        e2d = e.reshape(c * nb, block)
-        rpad = (-(c * nb)) % ROWS_TILE
-        if rpad:
-            g2d = jnp.pad(g2d, ((0, rpad), (0, 0)))
-            e2d = jnp.pad(e2d, ((0, rpad), (0, 0)))
-        send, new_e = ef_update_pallas(g2d, e2d, kb, interpret=_interpret())
-        send = send[:c * nb].reshape(c, nb * block)[:, :n]
-        new_e = new_e[:c * nb].reshape(c, nb * block)[:, :n]
-        return send, new_e
+    spec = engine.spec_for(acfg)
+    strategy = spec.strategy
+    unflatten = engine.make_unflatten(params_template)
+    local_train = engine.make_masked_local_trainer(loss_fn, lr)
 
     def _step(flat, residuals, batches, step_mask, weights, ks, ks_overlap):
         # host side effect: runs only at trace time
@@ -189,28 +90,9 @@ def make_round_step(loss_fn: Callable, params_template, *, lr: float,
         params = unflatten(flat)
         deltas, losses = jax.vmap(local_train, in_axes=(None, 0, 0))(
             params, batches, step_mask)
-        updates = flatten_client_trees(deltas)          # [C, n] f32
-        w = weights.astype(jnp.float32)
-        new_res = residuals
-
-        if strategy == "fedavg":
-            agg = jnp.einsum("k,kn->n", w, updates)
-        elif strategy in ("topk", "bcrs"):
-            cvals, _ = compress_batch(updates, ks)
-            agg = jnp.einsum("k,kn->n", w, cvals.astype(jnp.float32))
-        elif strategy == "eftopk":
-            if use_ef_kernel:
-                cvals, new_res = ef_kernel_step(updates, residuals)
-            else:
-                c_obj, new_res = comp.ef_compress_batch(
-                    residuals, updates, ks, compress_batch=compress_batch)
-                cvals = c_obj.values
-            agg = jnp.einsum("k,kn->n", w, cvals.astype(jnp.float32))
-        else:  # bcrs_opwa
-            cvals, cmask = compress_batch(updates, ks)
-            agg = opwa_mod.opwa_aggregate(cvals, cmask, w, acfg.gamma,
-                                          acfg.overlap_d,
-                                          use_kernel=use_kernel)
+        updates = engine.flatten_client_trees(deltas)   # [C, n] f32
+        agg, new_res = engine.aggregate_updates(
+            spec, updates, weights, ks, residuals=residuals)
 
         out = {"flat": flat - eta * agg,
                "residuals": new_res,
@@ -222,6 +104,11 @@ def make_round_step(loss_fn: Callable, params_template, *, lr: float,
             out["overlap_counts"] = opwa_mod.overlap_counts(masks_o)
         return out
 
+    # batches/step_mask are deliberately NOT donated: none of the outputs
+    # match their byte size, so XLA cannot alias them and the donation would
+    # only emit "donated buffers were not usable" warnings. Their staging
+    # cost is hidden instead by the harness's double-buffered prefetch
+    # (simulation.run_fl stages round r+1 while round r computes).
     donate = (0, 1) if strategy == "eftopk" else (0,)
     fn = jax.jit(_step, donate_argnums=donate)
     return FusedRoundStep(fn, strategy, with_overlap)

@@ -12,6 +12,11 @@ Two execution paths share the same state and host-side BCRS schedule:
                        training, compression, EF, OPWA, and the server
                        update run inside a single XLA executable with the
                        flat model / residual buffers donated.
+
+A third engine bypasses the per-round server entirely:
+``repro.fed.engine.make_sim_scan`` lowers the whole multi-round simulation
+into a single ``lax.scan`` (the simulation harness still threads this
+server's flat/residual state and time accumulator through it).
 """
 from __future__ import annotations
 
@@ -25,7 +30,7 @@ import numpy as np
 from repro.core import aggregation as agg_mod
 from repro.core import bcrs as bcrs_mod
 from repro.core import cost_model
-from repro.core.compression import flatten_tree, k_for_ratio
+from repro.core.compression import flatten_tree
 
 
 @dataclass
@@ -121,14 +126,8 @@ class FLServer:
                 raise RuntimeError(
                     "round_fused(want_overlap=True) needs "
                     "init_fused(..., collect_overlap=True)")
-            # Fig. 4 instrumentation mirrors the legacy fallback: schedule
-            # CRs when the strategy has them, else the configured CR*
-            # (fedavg's schedule crs are all-ones and would make the
-            # histogram degenerate)
-            crs_overlap = info.get("crs", np.full(k, self.acfg.cr))
             ks_overlap = jnp.asarray(
-                [k_for_ratio(self.n_params, float(c)) for c in crs_overlap],
-                jnp.int32)
+                agg_mod.overlap_ks(self.acfg, info, k, self.n_params))
         else:
             ks_overlap = ks    # ignored by the non-instrumented step
 

@@ -7,18 +7,29 @@ targets the paper's *relative* claims; see DESIGN.md §7):
   for each round: sample C·N clients -> E local epochs SGD -> compress ->
   aggregate (fedavg | topk | eftopk | bcrs | bcrs_opwa) -> time accounting.
 
-Two round engines (``fused`` flag):
+Three round engines (``engine`` / legacy ``fused`` flag):
 
-  * fused (default): the whole round is ONE jitted program
+  * fused (default): each round is ONE jitted program
     (repro.fed.round_step) — clients vmapped, traced-k compression, server
-    update with donated buffers. O(1) XLA compiles per simulation.
+    update with donated buffers, batch staging double-buffered via
+    ``device_put``. O(1) XLA compiles per simulation.
+  * scan: the ENTIRE simulation is ONE jitted ``lax.scan`` over rounds
+    (repro.fed.engine.make_sim_scan) — server flat params + EF residuals
+    threaded as carry, host-precomputed cohort/schedule/batch-index arrays
+    as xs, batches gathered in-jit. One compile, zero per-round dispatch;
+    bit-compatible with the fused engine on the shared seeded rng stream.
   * legacy: the original per-client Python loop, kept as the parity
     reference (same rng stream, same schedules -> accuracies match the
     fused path within float-accumulation noise).
+
+All engines draw cohort selection, failure survival, straggler arrivals, and
+batch indices from ONE host rng stream in identical order, so their
+trajectories are comparable point by point. ``run_fl_traced`` additionally
+offers a fully in-jit sampling path (PRNG-key-driven masks instead of host
+numpy — its own stream, not bit-parity with the host engines).
 """
 from __future__ import annotations
 
-import functools
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
@@ -28,13 +39,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aggregation as agg_mod
+from repro.core import bcrs as bcrs_mod
 from repro.core import cost_model
 from repro.core.opwa import overlap_counts
 from repro.data import (build_client_datasets, data_fractions,
                         dirichlet_partition, synthetic_classification)
+from repro.fed import engine as engine_mod
 from repro.fed.client import make_local_trainer
 from repro.fed.server import FLServer
-from repro.ft import FailureInjector, renormalize_coefficients
+from repro.ft import FailureInjector, StragglerPolicy, arrivals, over_select
+from repro.ft.failures import survivors_traced
+from repro.ft.straggler import (arrival_mask_traced,
+                                renormalize_coefficients_traced)
 
 
 # --------------------------------------------------------------- small model
@@ -90,6 +106,14 @@ class FLSimConfig:
     noise: float = 3.0
     seed: int = 0
     eval_every: int = 5
+    #: ragged-step mitigation: cap every client's local step count at this
+    #: quantile of the per-client step distribution (1.0 = off). Under
+    #: extreme Dirichlet skew the fused/scan engines pad every client to the
+    #: cohort max (exact no-op steps, up to ~3x wasted compute at beta=0.1);
+    #: trimming the tail trades a little local work of the largest clients
+    #: for a much tighter static shape. Approximation knob — changes the
+    #: trajectory, so parity suites leave it at 1.0.
+    step_cap_quantile: float = 1.0
 
 
 @dataclass
@@ -100,6 +124,9 @@ class FLSimResult:
     final_accuracy: float = 0.0
     wall_per_round: List[float] = field(default_factory=list)
     executed_rounds: List[int] = field(default_factory=list)
+    #: final EF residuals [C, n] (eftopk only) — exposed so the scan engine's
+    #: bit-parity with the fused engine is directly assertable
+    final_residuals: Optional[np.ndarray] = None
 
     def time_to_accuracy(self, target: float) -> Optional[float]:
         """Accumulated actual comm time up to AND INCLUDING the round whose
@@ -125,13 +152,86 @@ class FLSimResult:
         return None
 
 
-# ----------------------------------------------------------- fused batching
+# ------------------------------------------------------------- shared setup
+def _setup_sim(sim: FLSimConfig, acfg: agg_mod.AggregationConfig):
+    """Seeded experiment setup shared by every entry point (run_fl and
+    run_fl_traced MUST consume the host rng identically here, or 'same
+    seed' stops meaning 'same dataset/links'). Returns
+    (rng, clients, parts, fracs_all, splits, server)."""
+    rng = np.random.default_rng(sim.seed)
+    key = jax.random.PRNGKey(sim.seed)
+    x, y = synthetic_classification(sim.n_train + sim.n_test, sim.n_classes,
+                                    sim.dim, rng, noise=sim.noise)
+    x_train, y_train = x[: sim.n_train], y[: sim.n_train]
+    x_test, y_test = x[sim.n_train:], y[sim.n_train:]
+    parts = dirichlet_partition(y_train, sim.n_clients, sim.beta, rng,
+                                min_size=sim.batch_size)
+    clients = build_client_datasets(x_train, y_train, parts)
+    fracs_all = data_fractions(parts)
+    params = mlp_init(key, sim.dim, sim.n_classes, hidden=sim.hidden)
+    links = cost_model.sample_links(sim.n_clients, rng)
+    server = FLServer(params=params, acfg=acfg, eta=1.0, links=links)
+    return (rng, clients, parts, fracs_all,
+            (x_train, y_train, x_test, y_test), server)
+
+
+# ----------------------------------------------------------- host-side plan
 def _client_steps(ds, sim: FLSimConfig) -> int:
     return max(1, (len(ds) // sim.batch_size)) * sim.local_epochs
 
 
-def _stack_client_batches(clients, selected, sim: FLSimConfig, s_max: int,
-                          rng) -> Tuple[dict, jax.Array]:
+def _steps_by_client(clients, sim: FLSimConfig) -> np.ndarray:
+    """Per-client local step counts with the optional quantile cap applied
+    (shared by every engine so the trajectories stay comparable)."""
+    steps = np.array([_client_steps(ds, sim) for ds in clients], np.int64)
+    if sim.step_cap_quantile < 1.0:
+        cap = max(1, int(np.ceil(
+            np.quantile(steps, sim.step_cap_quantile))))
+        steps = np.minimum(steps, cap)
+    return steps
+
+
+def planned_client_steps(sim: FLSimConfig) -> np.ndarray:
+    """Per-client local step counts (cap applied) for ``sim``'s seeded
+    dataset — the exact partition every engine trains on, rebuilt through
+    ``_setup_sim`` so reporting/benchmarks can't drift from the harness's
+    rng draw order."""
+    _, clients, *_ = _setup_sim(sim, agg_mod.AggregationConfig())
+    return _steps_by_client(clients, sim)
+
+
+def _plan_cohort(rnd: int, rng, sim: FLSimConfig, fracs_all, links, v_bytes,
+                 acfg, failure: Optional[FailureInjector],
+                 straggler: Optional[StragglerPolicy]):
+    """One round's cohort: selection -> failure survivors -> straggler
+    arrivals -> renormalized weights. Shared by ALL engines — the host rng
+    stream is consumed in exactly this order everywhere, which is what makes
+    legacy/fused/scan trajectories comparable. Returns (selected, fr) or
+    None when the whole cohort died (the round is skipped)."""
+    n_sel = max(1, int(round(sim.n_clients * sim.participation)))
+    n_draw = over_select(n_sel, straggler) if straggler is not None else n_sel
+    n_draw = min(n_draw, sim.n_clients)
+    selected = rng.choice(sim.n_clients, n_draw, replace=False)
+    if failure is not None:
+        alive = failure.survivors(rnd, sim.n_clients)
+        selected = np.array([c for c in selected if alive[c]])
+        if len(selected) == 0:
+            return None
+    if straggler is not None and len(selected) > n_sel:
+        # completion times from the paper cost model at the configured CR
+        cr_eff = 1.0 if acfg.strategy == "fedavg" else acfg.cr
+        t = np.array([bcrs_mod.comm_time(v_bytes, links[c], cr_eff)
+                      for c in selected])
+        chosen, _ = arrivals(t, n_sel, straggler)
+        selected = selected[chosen]
+    fr = fracs_all[selected]
+    fr = fr / fr.sum()
+    return selected, fr
+
+
+def _stack_client_batches(clients, selected, sim: FLSimConfig,
+                          steps_by_client, s_max: int, rng
+                          ) -> Tuple[dict, jax.Array]:
     """Draw each selected client's batches (same rng stream as the legacy
     loop), zero-pad to ``s_max`` steps, stack to [C, S, ...] + mask [C, S].
 
@@ -142,7 +242,7 @@ def _stack_client_batches(clients, selected, sim: FLSimConfig, s_max: int,
     mask = np.zeros((len(selected), s_max), bool)
     for j, c in enumerate(selected):
         ds = clients[c]
-        steps = _client_steps(ds, sim)
+        steps = int(steps_by_client[c])
         xs, ys = ds.fixed_batches(sim.batch_size, steps, rng)
         if steps < s_max:
             xs = np.concatenate(
@@ -152,67 +252,93 @@ def _stack_client_batches(clients, selected, sim: FLSimConfig, s_max: int,
         xs_all.append(xs)
         ys_all.append(ys)
         mask[j, :steps] = True
-    batches = {"x": jnp.asarray(np.stack(xs_all)),
-               "y": jnp.asarray(np.stack(ys_all))}
-    return batches, jnp.asarray(mask)
+    batches = {"x": np.stack(xs_all), "y": np.stack(ys_all)}
+    return batches, mask
 
 
+def _overlap_hist(counts: np.ndarray, cohort_size: int) -> np.ndarray:
+    """Fig. 4 binning shared by every engine: histogram of the nonzero
+    degrees of overlap, padded to cohort_size+1 bins (degree 0 dropped)."""
+    counts = np.asarray(counts)
+    return np.bincount(counts[counts > 0], minlength=cohort_size + 1)
+
+
+# ------------------------------------------------------------------ run_fl
 def run_fl(sim: FLSimConfig, acfg: agg_mod.AggregationConfig,
            failure: Optional[FailureInjector] = None,
-           collect_overlap: bool = False, fused: bool = True) -> FLSimResult:
-    rng = np.random.default_rng(sim.seed)
-    key = jax.random.PRNGKey(sim.seed)
+           collect_overlap: bool = False, fused: bool = True,
+           engine: Optional[str] = None,
+           straggler: Optional[StragglerPolicy] = None) -> FLSimResult:
+    """Run the simulation. ``engine`` selects the round engine
+    ("legacy" | "fused" | "scan"); when None it falls back to the legacy
+    ``fused`` bool ("fused" / "legacy")."""
+    if engine is None:
+        engine = "fused" if fused else "legacy"
+    if engine not in ("legacy", "fused", "scan"):
+        raise ValueError(f"unknown engine {engine!r}")
+    (rng, clients, parts, fracs_all,
+     (x_train, y_train, x_test, y_test), server) = _setup_sim(sim, acfg)
+    links = server.links
+    steps_by_client = _steps_by_client(clients, sim)
+    s_max = int(steps_by_client.max())
 
-    # data
-    x, y = synthetic_classification(sim.n_train + sim.n_test, sim.n_classes,
-                                    sim.dim, rng, noise=sim.noise)
-    x_train, y_train = x[: sim.n_train], y[: sim.n_train]
-    x_test, y_test = x[sim.n_train:], y[sim.n_train:]
-    parts = dirichlet_partition(y_train, sim.n_clients, sim.beta, rng,
-                                min_size=sim.batch_size)
-    clients = build_client_datasets(x_train, y_train, parts)
-    fracs_all = data_fractions(parts)
+    if engine == "scan":
+        return _run_scan(sim, acfg, rng, clients, parts, fracs_all, links,
+                         server, steps_by_client, s_max, x_train, y_train,
+                         x_test, y_test, failure, straggler, collect_overlap)
 
-    # model + server
-    params = mlp_init(key, sim.dim, sim.n_classes, hidden=sim.hidden)
-    links = cost_model.sample_links(sim.n_clients, rng)
-    server = FLServer(params=params, acfg=acfg, eta=1.0, links=links)
-    if fused:
+    if engine == "fused":
         server.init_fused(mlp_loss, sim.lr, collect_overlap=collect_overlap)
-        s_max = max(_client_steps(ds, sim) for ds in clients)
     else:
         local_train = jax.jit(make_local_trainer(mlp_loss, sim.lr))
 
     result = FLSimResult()
     overlap_hists = []
-    n_sel = max(1, int(round(sim.n_clients * sim.participation)))
 
-    for rnd in range(sim.rounds):
-        t0 = time.perf_counter()
-        selected = rng.choice(sim.n_clients, n_sel, replace=False)
-        if failure is not None:
-            alive = failure.survivors(rnd, sim.n_clients)
-            selected = np.array([c for c in selected if alive[c]])
-            if len(selected) == 0:
+    def round_stream():
+        """Per-round plans; for the fused engine the stacked client batches
+        are staged to device here (async ``jnp.asarray`` transfer) so the
+        consumer can pull round r+1 — staging its buffers — while round r's
+        dispatched program is still running: double-buffered staging, two
+        rounds' batch buffers alive at once, each consumed exactly once.
+        The legacy engine draws its batches in the consumer, so it must not
+        be prefetched (the shared rng stream would reorder)."""
+        for rnd in range(sim.rounds):
+            plan = _plan_cohort(rnd, rng, sim, fracs_all, links,
+                                server.v_bytes, acfg, failure, straggler)
+            if plan is None:
                 continue
-        fr = fracs_all[selected]
-        fr = fr / fr.sum()
+            selected, fr = plan
+            staged = None
+            if engine == "fused":
+                batches, mask = _stack_client_batches(
+                    clients, selected, sim, steps_by_client, s_max, rng)
+                staged = ({k: jnp.asarray(v) for k, v in batches.items()},
+                          jnp.asarray(mask))
+            yield rnd, selected, fr, staged
+
+    stream = round_stream()
+    item = next(stream, None)
+    while item is not None:
+        rnd, selected, fr, staged = item
+        t0 = time.perf_counter()
         is_overlap_round = collect_overlap and rnd == sim.rounds // 2
 
-        if fused:
-            batches, step_mask = _stack_client_batches(
-                clients, selected, sim, s_max, rng)
+        if engine == "fused":
+            batches, step_mask = staged
             info = server.round_fused(batches, step_mask, fr, selected,
                                       want_overlap=is_overlap_round)
+            # prefetch: stage the NEXT round's buffers while this round's
+            # dispatched program is still running on device
+            item = next(stream, None)
             if is_overlap_round:
-                counts = np.asarray(info["overlap_counts"])
-                overlap_hists.append(np.bincount(
-                    counts[counts > 0], minlength=len(selected) + 1))
+                overlap_hists.append(_overlap_hist(info["overlap_counts"],
+                                                   len(selected)))
         else:
             deltas = []
             for c in selected:
                 ds = clients[c]
-                steps = _client_steps(ds, sim)
+                steps = int(steps_by_client[c])
                 xs, ys = ds.fixed_batches(sim.batch_size, steps, rng)
                 delta, _ = local_train(
                     server.params,
@@ -228,10 +354,9 @@ def run_fl(sim: FLSimConfig, acfg: agg_mod.AggregationConfig,
                 masks = jnp.stack([
                     topk_compress(flat[i], float(crs[i])).mask
                     for i in range(flat.shape[0])])
-                counts = np.asarray(overlap_counts(masks))
-                hist = np.bincount(counts[counts > 0],
-                                   minlength=len(deltas) + 1)
-                overlap_hists.append(hist)
+                overlap_hists.append(_overlap_hist(
+                    np.asarray(overlap_counts(masks)), len(deltas)))
+            item = next(stream, None)
 
         server._flat.block_until_ready()
         result.wall_per_round.append(time.perf_counter() - t0)
@@ -244,6 +369,263 @@ def run_fl(sim: FLSimConfig, acfg: agg_mod.AggregationConfig,
 
     result.times = server.times
     result.final_accuracy = result.accuracies[-1][1] if result.accuracies else 0.0
+    if acfg.strategy == "eftopk" and server._residuals is not None:
+        result.final_residuals = np.asarray(server._residuals)
     if overlap_hists:
         result.overlap_hist = overlap_hists[0]
+    return result
+
+
+# -------------------------------------------------------------- scan engine
+def _run_scan(sim, acfg, rng, clients, parts, fracs_all, links, server,
+              steps_by_client, s_max, x_train, y_train, x_test, y_test,
+              failure, straggler, collect_overlap) -> FLSimResult:
+    """Whole-simulation ``lax.scan`` engine: precompute every round's plan on
+    host (same rng stream as the fused loop), stack the schedules + batch
+    sample indices as scan xs, run ONE jitted program, then evaluate the
+    returned per-round model trajectory."""
+    n_sel = max(1, int(round(sim.n_clients * sim.participation)))
+    n_params, v_bytes = server.n_params, server.v_bytes
+    bs = sim.batch_size
+    ef = acfg.strategy == "eftopk"
+
+    plans = []          # (rnd, selected, weights, ks, ks_overlap, idx)
+    for rnd in range(sim.rounds):
+        plan = _plan_cohort(rnd, rng, sim, fracs_all, links, v_bytes, acfg,
+                            failure, straggler)
+        if plan is None:
+            continue
+        selected, fr = plan
+        c_r = len(selected)
+        links_sel = [links[i] for i in selected]
+        crs, weights, info = agg_mod.round_schedule(acfg, c_r, fr, links_sel,
+                                                    v_bytes)
+        ks = agg_mod.ks_for_schedule(n_params, crs, acfg)
+        ks_overlap = (agg_mod.overlap_ks(acfg, info, c_r, n_params)
+                      if collect_overlap and rnd == sim.rounds // 2
+                      else None)
+        # batch sample indices, drawn per client in cohort order — the exact
+        # rng calls the fused path's host staging makes
+        idx = np.zeros((c_r, s_max * bs), np.int32)
+        for j, c in enumerate(selected):
+            steps = int(steps_by_client[c])
+            local = clients[c].fixed_batch_indices(bs, steps, rng)
+            idx[j, : steps * bs] = parts[c][local]
+        server._account_time(dict(info), links_sel)
+        plans.append((rnd, selected, weights, ks, ks_overlap, idx))
+
+    result = FLSimResult()
+    if not plans:
+        result.times = server.times
+        return result
+
+    # ------------------------------------------------- stack xs [R, C, ...]
+    r_exec, c_max = len(plans), n_sel
+    xs: Dict[str, np.ndarray] = {
+        "sample_idx": np.zeros((r_exec, c_max, s_max, bs), np.int32),
+        "step_mask": np.zeros((r_exec, c_max, s_max), bool),
+        "active": np.zeros((r_exec, c_max), bool),
+        "weights": np.zeros((r_exec, c_max), np.float32),
+        "ks": np.ones((r_exec, c_max), np.int32),
+    }
+    if ef:
+        xs["reset_ef"] = np.zeros((r_exec,), bool)
+    if collect_overlap:
+        xs["ks_overlap"] = np.ones((r_exec, c_max), np.int32)
+        xs["overlap_round"] = np.zeros((r_exec,), bool)
+    prev_c = None
+    for i, (rnd, selected, weights, ks, ks_overlap, idx) in enumerate(plans):
+        c_r = len(selected)
+        xs["sample_idx"][i, :c_r] = idx.reshape(c_r, s_max, bs)
+        for j, c in enumerate(selected):
+            xs["step_mask"][i, j, : int(steps_by_client[c])] = True
+        xs["active"][i, :c_r] = True
+        xs["weights"][i, :c_r] = weights
+        xs["ks"][i, :c_r] = ks
+        if ef:
+            # mirrors FLServer.round_fused: residuals reset whenever the
+            # cohort size changes between consecutive EXECUTED rounds
+            xs["reset_ef"][i] = prev_c is not None and c_r != prev_c
+        if ks_overlap is not None:
+            xs["ks_overlap"][i, :c_r] = ks_overlap
+            xs["overlap_round"][i] = True
+        prev_c = c_r
+
+    # --------------------------------------------------- one compiled scan
+    x_all, y_all = jnp.asarray(x_train), jnp.asarray(y_train)
+
+    def gather_batches(p):
+        idx = p["sample_idx"]
+        return {"x": x_all[idx], "y": y_all[idx]}
+
+    sim_fn = engine_mod.make_sim_scan(
+        mlp_loss, server.params, lr=sim.lr, acfg=acfg, eta=server.eta,
+        with_overlap=collect_overlap, make_batches=gather_batches)
+    residuals0 = (jnp.zeros((c_max, n_params), jnp.float32) if ef
+                  else jnp.zeros((0,), jnp.float32))
+    xs_dev = {k: jnp.asarray(v) for k, v in xs.items()}
+    # AOT-compile so wall_per_round reports the steady-state per-round cost
+    # of the compiled trajectory (trace/compile is a one-off, just like the
+    # fused engine's warmup rounds that benchmarks discard)
+    compiled = sim_fn.compile(server._flat, residuals0, xs_dev)
+    t_exec0 = time.perf_counter()
+    out = compiled(server._flat, residuals0, xs_dev)
+    out["flat"].block_until_ready()
+    wall = time.perf_counter() - t_exec0
+
+    # --------------------------------------------------------- host post
+    server._flat = out["flat"]
+    server.params = server._unravel(server._flat)
+    flats = out["ys"]["flat"]
+    xt, yt = jnp.asarray(x_test), jnp.asarray(y_test)
+    for i, (rnd, selected, *_rest) in enumerate(plans):
+        if rnd % sim.eval_every == 0 or rnd == sim.rounds - 1:
+            acc = float(mlp_accuracy(server._unravel(flats[i]), xt, yt))
+            result.accuracies.append((rnd, acc))
+    result.executed_rounds = [p[0] for p in plans]
+    result.wall_per_round = [wall / r_exec] * r_exec
+    result.times = server.times
+    result.final_accuracy = (result.accuracies[-1][1]
+                             if result.accuracies else 0.0)
+    if ef:
+        c_last = len(plans[-1][1])
+        server._residuals = out["residuals"][:c_last]
+        result.final_residuals = np.asarray(server._residuals)
+    if collect_overlap:
+        for i, (rnd, selected, *_rest) in enumerate(plans):
+            if rnd == sim.rounds // 2:
+                result.overlap_hist = _overlap_hist(
+                    out["ys"]["overlap_counts"][i], len(selected))
+    return result
+
+
+# ----------------------------------------------------- traced-sampling scan
+def run_fl_traced(sim: FLSimConfig, acfg: agg_mod.AggregationConfig,
+                  p_fail: float = 0.0,
+                  straggler: Optional[StragglerPolicy] = None) -> FLSimResult:
+    """Fully-traced sampling variant of the scan engine: cohort permutation,
+    failure survival draws, straggler arrival deadlines, and batch index
+    draws all happen INSIDE the one compiled program from a threaded PRNG
+    key (``ft.failures.survivors_traced`` / ``ft.straggler.
+    arrival_mask_traced`` masks). Self-consistent stream — the host-rng
+    ``engine="scan"`` path remains the seeded parity reference.
+
+    Host-side per-round work is exactly one PRNG key; the BCRS schedule is
+    computed once over the full client set (links are round-invariant) and
+    gathered per cohort in-jit, with coefficients renormalized over the
+    surviving arrivals (``renormalize_coefficients_traced``). The sampled
+    cohort is surfaced back to the host per round (ys), so comm-time
+    accounting covers exactly the participating clients — the same
+    accounting semantics as the host engines.
+    """
+    (rng, clients, parts, fracs_all,
+     (x_train, y_train, x_test, y_test), server) = _setup_sim(sim, acfg)
+    links = server.links
+    key = jax.random.PRNGKey(sim.seed)
+    fracs_all = np.asarray(fracs_all, np.float64)
+    n_params, v_bytes = server.n_params, server.v_bytes
+    n, bs = sim.n_clients, sim.batch_size
+
+    steps_by_client = _steps_by_client(clients, sim)
+    s_max = int(steps_by_client.max())
+    n_sel = max(1, int(round(n * sim.participation)))
+    n_draw = min(over_select(n_sel, straggler) if straggler else n_sel, n)
+
+    # round-invariant per-client tables (links don't change, so the BCRS
+    # schedule over the FULL client set is computable once on host)
+    crs_all, coeffs_all, info = agg_mod.round_schedule(
+        acfg, n, fracs_all / fracs_all.sum(), links, v_bytes)
+    ks_all = agg_mod.ks_for_schedule(n_params, crs_all, acfg)
+    cr_eff = 1.0 if acfg.strategy == "fedavg" else acfg.cr
+    times_all = np.array([bcrs_mod.comm_time(v_bytes, l, cr_eff)
+                          for l in links], np.float32)
+    lens = np.array([len(ds) for ds in clients], np.int64)
+    table = np.zeros((n, int(lens.max())), np.int32)
+    for c, p in enumerate(parts):
+        table[c, : len(p)] = p
+    smask_all = (np.arange(s_max)[None, :]
+                 < steps_by_client[:, None])          # [N, S]
+
+    dev = dict(
+        coeffs=jnp.asarray(coeffs_all, jnp.float32),
+        ks=jnp.asarray(ks_all, jnp.int32),
+        times=jnp.asarray(times_all),
+        lens=jnp.asarray(lens, jnp.int32),
+        table=jnp.asarray(table),
+        smask=jnp.asarray(smask_all),
+        x=jnp.asarray(x_train), y=jnp.asarray(y_train))
+    weighted_by_coeffs = acfg.strategy in ("bcrs", "bcrs_opwa")
+
+    def plan_fn(xrow):
+        k_perm, k_fail, k_batch = jax.random.split(xrow["key"], 3)
+        cohort = jax.random.permutation(k_perm, n)[:n_draw]
+        active = survivors_traced(k_fail, n, p_fail)[cohort]
+        if straggler is not None:
+            t = jnp.where(active, dev["times"][cohort], jnp.inf)
+            active = arrival_mask_traced(t, n_sel)
+        coeffs = dev["coeffs"][cohort]
+        if weighted_by_coeffs:
+            w = renormalize_coefficients_traced(coeffs, active)
+        else:
+            w = jnp.where(active, coeffs, 0.0)
+            w = w / jnp.maximum(jnp.sum(w), 1e-12)
+        local = jax.random.randint(
+            k_batch, (n_draw, s_max * bs), 0,
+            dev["lens"][cohort][:, None])
+        idx = jnp.take_along_axis(dev["table"][cohort], local, axis=1)
+        return {"sample_idx": idx.reshape(n_draw, s_max, bs),
+                "step_mask": dev["smask"][cohort],
+                "active": active, "weights": w, "ks": dev["ks"][cohort],
+                # surfaced to the host so comm time is accounted over the
+                # clients that actually participated, like the host engines
+                "ys_extra": {"cohort": cohort, "arrived": active}}
+
+    def gather_batches(p):
+        idx = p["sample_idx"]
+        return {"x": dev["x"][idx], "y": dev["y"][idx]}
+
+    sim_fn = engine_mod.make_sim_scan(
+        mlp_loss, server.params, lr=sim.lr, acfg=acfg, eta=server.eta,
+        make_batches=gather_batches, plan_fn=plan_fn)
+    ef = acfg.strategy == "eftopk"
+    residuals0 = (jnp.zeros((n_draw, n_params), jnp.float32) if ef
+                  else jnp.zeros((0,), jnp.float32))
+    t0 = time.perf_counter()
+    out = sim_fn(server._flat, residuals0,
+                 {"key": jax.random.split(jax.random.fold_in(key, 1),
+                                          sim.rounds)})
+    out["flat"].block_until_ready()
+    wall = time.perf_counter() - t0
+
+    result = FLSimResult()
+    server._flat = out["flat"]
+    server.params = server._unravel(server._flat)
+    flats = out["ys"]["flat"]
+    cohorts = np.asarray(out["ys"]["cohort"])
+    arrived = np.asarray(out["ys"]["arrived"])
+    xt, yt = jnp.asarray(x_test), jnp.asarray(y_test)
+    for rnd in range(sim.rounds):
+        # comm time over the clients that actually participated this round
+        # (same accounting the host engines do for their cohorts). A round
+        # whose whole sampled cohort died contributes nothing — the revived
+        # survivor need not be in the cohort — exactly like the host
+        # engines' skipped rounds (the in-jit model update is a no-op too).
+        sel = cohorts[rnd][arrived[rnd]]
+        if sel.size:
+            info_r = {"strategy": acfg.strategy}
+            if "crs" in info:
+                info_r["crs"] = np.asarray(crs_all)[sel]
+            server._account_time(info_r, [links[c] for c in sel])
+            result.executed_rounds.append(rnd)
+        if rnd % sim.eval_every == 0 or rnd == sim.rounds - 1:
+            acc = float(mlp_accuracy(server._unravel(flats[rnd]), xt, yt))
+            result.accuracies.append((rnd, acc))
+    result.wall_per_round = ([wall / len(result.executed_rounds)]
+                             * len(result.executed_rounds)
+                             if result.executed_rounds else [])
+    result.times = server.times
+    result.final_accuracy = (result.accuracies[-1][1]
+                             if result.accuracies else 0.0)
+    if ef:
+        result.final_residuals = np.asarray(out["residuals"])
     return result

@@ -13,6 +13,22 @@ from typing import List, Optional, Sequence
 import numpy as np
 
 
+def survivors_traced(key, n_clients: int, p_fail: float):
+    """Traced twin of ``FailureInjector.survivors`` for the fully in-jit
+    sampling path of the scanned simulation (``engine="scan"`` keeps the
+    host injector as the seeded parity reference; this one draws from a
+    threaded PRNG key instead). iid per-round survival draws; if the whole
+    cohort would die, one uniformly-chosen client is revived — the same
+    never-lose-everyone guarantee the host injector makes."""
+    import jax
+    import jax.numpy as jnp
+    k_draw, k_revive = jax.random.split(key)
+    alive = jax.random.uniform(k_draw, (n_clients,)) >= p_fail
+    revived = jnp.zeros((n_clients,), bool).at[
+        jax.random.randint(k_revive, (), 0, n_clients)].set(True)
+    return alive | (~alive.any() & revived)
+
+
 @dataclass
 class FailureInjector:
     """Deterministic failure schedule for tests/sims: client i fails in round

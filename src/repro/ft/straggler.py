@@ -44,6 +44,27 @@ def arrivals(times: Sequence[float], n_target: int,
     return chosen, dur
 
 
+def arrival_mask_traced(times, n_target: int):
+    """Traced twin of ``arrivals`` (in-jit straggler deadline for the
+    scanned simulation): pick the ``n_target`` fastest finishers. Clients
+    whose completion time is +inf (already failed) never arrive. Returns a
+    bool mask over the cohort axis."""
+    import jax.numpy as jnp
+    t = jnp.asarray(times, jnp.float32)
+    order = jnp.argsort(t)
+    rank = jnp.zeros_like(order).at[order].set(jnp.arange(t.shape[0]))
+    return (rank < n_target) & jnp.isfinite(t)
+
+
+def renormalize_coefficients_traced(coeffs, arrived):
+    """Traced twin of ``renormalize_coefficients`` (jit-safe: jnp.where in
+    place of the host branch)."""
+    import jax.numpy as jnp
+    out = jnp.where(arrived, coeffs.astype(jnp.float32), 0.0)
+    s_all, s_in = jnp.sum(coeffs.astype(jnp.float32)), jnp.sum(out)
+    return out * jnp.where(s_in > 0, s_all / jnp.maximum(s_in, 1e-12), 1.0)
+
+
 def renormalize_coefficients(coeffs: np.ndarray, arrived: np.ndarray
                              ) -> np.ndarray:
     """Keep arrived clients' relative weights; zero the rest; rescale so the

@@ -2,6 +2,12 @@
 clients on the batch mesh axes, BCRS per-round CR schedule, OPWA
 aggregation, straggler deadline + elastic cohort, checkpoint/restart.
 
+The round program (``fed.mesh_round.make_fl_round_step``) is a thin adapter
+over the shared compression substrate (``fed.engine`` /
+``core.compression.topk_compress_dynamic``) — the same traced-k selection
+and OPWA merge the simulation engines run, applied per leaf so TP-sharded
+tensors stay sharded.
+
     PYTHONPATH=src python -m repro.launch.fl_train --arch stablelm-1.6b \
         --reduced --rounds 10 --clients 8
 """
@@ -35,6 +41,8 @@ def main():
     ap.add_argument("--cr", type=float, default=0.05)
     ap.add_argument("--alpha", type=float, default=1.0)
     ap.add_argument("--gamma", type=float, default=3.0)
+    ap.add_argument("--overlap-d", type=int, default=1,
+                    help="OPWA required degree of overlap D")
     ap.add_argument("--lr", type=float, default=5e-2)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--fail-prob", type=float, default=0.0)
@@ -52,7 +60,8 @@ def main():
     v_bytes = 4.0 * n_flat
 
     round_fn = jax.jit(make_fl_round_step(
-        model, lr_local=args.lr, eta=1.0, gamma=args.gamma))
+        model, lr_local=args.lr, eta=1.0, gamma=args.gamma,
+        overlap_d=args.overlap_d))
 
     links = cost_model.sample_links(args.clients, rng)
     fracs = np.full(args.clients, 1.0 / args.clients)
