@@ -4,6 +4,7 @@ plus the multi-round dimension (fused per-round dispatch vs the ONE-compile
 
     PYTHONPATH=src python -m benchmarks.bench_round [--fast] [--out PATH]
     PYTHONPATH=src python -m benchmarks.bench_round --sim-scan [--fast]
+    PYTHONPATH=src python -m benchmarks.bench_round --kernels [--fast]
 
 For each (strategy, cohort size K) cell it runs the same seeded simulation
 through both engines, times steady-state rounds (first round excluded as
@@ -37,6 +38,14 @@ local SGD, dominates — the regime the scan lowering targets. Compile counts
 must stay O(1) for both engines (recorded in the JSON). A ``ragged``
 section records the step-cap (``FLSimConfig.step_cap_quantile``) win under
 extreme Dirichlet skew.
+
+``--kernels`` benchmarks the traced-k Pallas megakernel pipeline
+(``threshold_find`` + ``fused_merge``) against the unfused jnp merge and
+writes ``BENCH_kernels.json``: per (strategy, C, n) cell the roofline HBM
+bytes of both lowerings (analytic kernel DMA model vs trip-count-aware HLO
+accounting — repro.roofline.kernel_bytes), wall-clock (interpret mode off
+TPU), a bit-exactness flag, and a trace-count assertion that the
+kernel-routed scan simulation still compiles exactly once.
 """
 from __future__ import annotations
 
@@ -50,6 +59,7 @@ import time
 import numpy as np
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.aggregation import AggregationConfig
 from repro.fed import round_step
@@ -290,6 +300,119 @@ def run_sim_scan(fast: bool = False,
     return doc
 
 
+# ------------------------------------------------- megakernel pipeline
+KERNEL_STRATEGIES = ("topk", "bcrs_opwa", "eftopk")
+
+
+def bench_kernels_cell(strategy: str, clients: int, n: int,
+                       iters: int) -> dict:
+    """One [C, n] merge through the unfused jnp ``aggregate_updates`` vs the
+    traced-k Pallas megakernel pipeline: roofline HBM bytes (analytic DMA
+    model vs trip-count-aware HLO accounting — see
+    repro.roofline.kernel_bytes), wall-clock, and bit-exact parity.
+
+    On non-TPU platforms the kernel route runs in Pallas INTERPRET mode, so
+    its wall-clock is a correctness/overhead datapoint, not a hardware
+    prediction — the roofline bytes are the portable win metric."""
+    from repro.core.compression import k_for_ratio
+    from repro.fed import engine as engine_mod
+    from repro.roofline import merge_traffic_ratio
+
+    rng = np.random.default_rng(clients * 7 + n % 1009)
+    u = jnp.asarray(rng.normal(size=(clients, n)).astype(np.float32))
+    e = jnp.asarray((rng.normal(size=(clients, n)) * 0.3).astype(np.float32))
+    w = rng.random(clients).astype(np.float32) + 0.05
+    w = jnp.asarray(w / w.sum())
+    # BCRS-style spread of per-client retained counts
+    crs = np.geomspace(0.01, 0.5, clients)
+    ks = jnp.asarray([k_for_ratio(n, float(c)) for c in crs], jnp.int32)
+    ef = strategy == "eftopk"
+
+    out = {"strategy": strategy, "clients": clients, "n": n}
+    aggs = {}
+    for label, use_kernel in (("unfused", False), ("kernel", True)):
+        spec = engine_mod.ClientUpdateSpec(strategy=strategy, gamma=5.0,
+                                           use_kernel=use_kernel)
+        fn = jax.jit(lambda u, w, ks, e, spec=spec: engine_mod.
+                     aggregate_updates(spec, u, w, ks,
+                                       residuals=e if ef else None))
+        agg, new_res = fn(u, w, ks, e)              # warmup/compile
+        agg.block_until_ready()
+        walls = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            a, r = fn(u, w, ks, e)
+            a.block_until_ready()
+            if r is not None:
+                r.block_until_ready()
+            walls.append(time.perf_counter() - t0)
+        aggs[label] = (np.asarray(agg),
+                       np.asarray(new_res) if ef else None)
+        out[label] = {"s_per_merge": statistics.median(walls),
+                      "s_per_merge_min": min(walls)}
+    out["agg_max_abs_diff"] = float(
+        np.abs(aggs["kernel"][0] - aggs["unfused"][0]).max())
+    out["bit_exact"] = bool(
+        (aggs["kernel"][0] == aggs["unfused"][0]).all()
+        and (not ef or (aggs["kernel"][1] == aggs["unfused"][1]).all()))
+    spec_ref = engine_mod.ClientUpdateSpec(strategy=strategy, gamma=5.0,
+                                           use_kernel=False)
+    out["roofline"] = merge_traffic_ratio(spec_ref, clients, n)
+    return out
+
+
+def run_kernels(fast: bool = False,
+                out_path: str = "BENCH_kernels.json") -> dict:
+    from repro.core.aggregation import AggregationConfig
+    from repro.fed import engine as engine_mod
+    from repro.fed.simulation import FLSimConfig, run_fl
+
+    cells = ([(8, 1 << 13), (16, 1 << 14)] if fast
+             else [(8, 1 << 14), (16, 1 << 16), (32, 1 << 16)])
+    iters = 3 if fast else 5
+    results = []
+    for clients, n in cells:
+        for strategy in KERNEL_STRATEGIES:
+            cell = bench_kernels_cell(strategy, clients, n, iters)
+            results.append(cell)
+            r = cell["roofline"]
+            print(f"{strategy:>10} C={clients:<3} n={n:<7} "
+                  f"HBM {r['unfused']['passes']:6.1f} -> "
+                  f"{r['kernel']['passes']:5.1f} passes "
+                  f"({r['ratio']:.1f}x less traffic)  "
+                  f"wall unfused {cell['unfused']['s_per_merge'] * 1e3:7.1f} "
+                  f"ms  kernel {cell['kernel']['s_per_merge'] * 1e3:7.1f} ms"
+                  f"  bit_exact={cell['bit_exact']}")
+
+    # the kernel-routed scan simulation must still be ONE compile end to end
+    before = sum(engine_mod.TRACE_COUNTS.values())
+    run_fl(FLSimConfig(rounds=4, n_clients=6, n_train=1200, n_test=300,
+                       dim=32, hidden=32, n_classes=5, eval_every=2, seed=2),
+           AggregationConfig(strategy="bcrs_opwa", cr=0.1, use_kernel=True),
+           engine="scan")
+    scan_traces = sum(engine_mod.TRACE_COUNTS.values()) - before
+    print(f"kernel-routed scan simulation: {scan_traces} trace(s)")
+
+    doc = {
+        "schema": "bench_kernels/v1",
+        "env": {"platform": jax.devices()[0].platform,
+                "jax": jax.__version__,
+                "cpu_count": os.cpu_count(),
+                "pallas_interpret": jax.devices()[0].platform != "tpu"},
+        "config": {"iters": iters, "fast": fast,
+                   "note": ("roofline bytes: analytic kernel DMA model vs "
+                            "trip-count-aware HLO accounting of the unfused "
+                            "lowering; wall-clock on non-TPU runs the "
+                            "kernels in interpret mode")},
+        "results": results,
+        "scan_traces_with_kernels": scan_traces,
+    }
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"wrote {out_path}")
+    return doc
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
@@ -300,11 +423,32 @@ def main() -> int:
                     help="run the multi-round benchmark (fused per-round "
                          "dispatch vs the one-compile scan engine) and "
                          "write BENCH_sim_scan.json")
+    ap.add_argument("--kernels", action="store_true",
+                    help="benchmark the traced-k Pallas megakernel pipeline "
+                         "vs the unfused merge (roofline HBM bytes + "
+                         "wall-clock + parity) and write BENCH_kernels.json")
     ap.add_argument("--check", action="store_true",
                     help="exit nonzero unless fused beats legacy >=3x at "
                          "K=16 bcrs_opwa (with --sim-scan: scan dispatch "
-                         "overhead >=2x lower than fused)")
+                         "overhead >=2x lower than fused; with --kernels: "
+                         "bit-exact, >=3x HBM traffic reduction, and a "
+                         "1-compile kernel-routed scan)")
     args = ap.parse_args()
+    if args.kernels:
+        out = ("BENCH_kernels.json" if args.out == "BENCH_round.json"
+               else args.out)
+        doc = run_kernels(fast=args.fast, out_path=out)
+        if args.check:
+            bad = [c for c in doc["results"]
+                   if c["roofline"]["ratio"] < 3.0 or not c["bit_exact"]]
+            if bad or doc["scan_traces_with_kernels"] != 1:
+                print(f"FAIL: kernels check "
+                      f"(bad cells {[(c['strategy'], c['clients']) for c in bad]}, "
+                      f"scan traces {doc['scan_traces_with_kernels']})")
+                return 1
+            print("OK: megakernel pipeline bit-exact, >=3x HBM traffic "
+                  "reduction, 1-compile kernel-routed scan")
+        return 0
     if args.sim_scan:
         out = ("BENCH_sim_scan.json" if args.out == "BENCH_round.json"
                else args.out)

@@ -113,11 +113,23 @@ def topk_compress_dynamic(u: jax.Array, k: jax.Array,
 
 
 # ------------------------------------------------- batched traced-k top-k
-def topk_compress_batch(updates: jax.Array, ks: jax.Array) -> Compressed:
+def topk_compress_batch(updates: jax.Array, ks: jax.Array,
+                        use_kernel: bool = False) -> Compressed:
     """Per-row dynamic Top-K: updates [K, n], ks int32 [K] (traced).
 
     One trace serves every BCRS schedule — the per-client ``float(cr)``
-    static-arg retrace this replaces cost O(rounds × K) XLA compiles."""
+    static-arg retrace this replaces cost O(rounds × K) XLA compiles.
+    ``use_kernel=True`` finds the thresholds through the Pallas
+    ``threshold_find`` kernel (8 streamed HBM sweeps instead of 32 unfused
+    bisection passes) and applies them in one more pass — bit-identical
+    masks/values, same traced-k contract."""
+    if use_kernel:
+        from repro.kernels import ops as kops
+        th = kops.topk_thresholds(updates, ks)
+        bits = jax.lax.bitcast_convert_type(
+            jnp.abs(updates.astype(jnp.float32)), jnp.uint32)
+        mask = bits >= th[:, None]
+        return Compressed(jnp.where(mask, updates, 0), mask)
     return jax.vmap(topk_compress_dynamic)(updates, ks)
 
 
@@ -137,10 +149,31 @@ def block_topk_compress_batch(updates: jax.Array, ks_block: jax.Array,
 
 def ef_compress_batch(residuals: jax.Array, updates: jax.Array,
                       ks: jax.Array,
-                      compress_batch: Callable = topk_compress_batch
+                      compress_batch: Callable = topk_compress_batch,
+                      use_kernel: bool = False
                       ) -> Tuple[Compressed, jax.Array]:
     """Batched EF-TopK: bit-compatible with a per-client ``ef_compress``
-    loop (same corrected/send/residual arithmetic, vectorized)."""
+    loop (same corrected/send/residual arithmetic, vectorized).
+    ``use_kernel=True`` (global Top-K only) selects on
+    ``residuals + updates`` through the Pallas threshold kernel without
+    materializing the corrected array once per bisection step; combining it
+    with a non-global ``compress_batch`` is a loud error, not a silent
+    semantic switch."""
+    if use_kernel:
+        if compress_batch is not topk_compress_batch:
+            raise ValueError(
+                "ef_compress_batch(use_kernel=True) implements global Top-K "
+                "selection only — it cannot honor a custom compress_batch "
+                f"({getattr(compress_batch, '__name__', compress_batch)}); "
+                "pass use_kernel=False for block/other compressors")
+        from repro.kernels import ops as kops
+        th = kops.topk_thresholds(updates, ks, residuals=residuals)
+        corrected = residuals + updates
+        bits = jax.lax.bitcast_convert_type(
+            jnp.abs(corrected.astype(jnp.float32)), jnp.uint32)
+        mask = bits >= th[:, None]
+        vals = jnp.where(mask, corrected, 0)
+        return Compressed(vals, mask), corrected - vals
     corrected = residuals + updates
     comp = compress_batch(corrected, ks)
     return comp, corrected - comp.values

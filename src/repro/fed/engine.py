@@ -29,8 +29,12 @@ are now thin adapters over the pure functions here:
                                 dispatch.
 
 Every Top-K selection in the tree routes through
-``core.compression.topk_compress_dynamic`` — there is exactly one
-implementation of the bisection.
+``core.compression.topk_compress_dynamic`` semantics — the traced-k
+bit-pattern bisection (ties kept). With ``use_kernel`` on, the flat-space
+path lowers the WHOLE compress->EF->merge pipeline to two Pallas kernels
+(``kernels.threshold_find`` + ``kernels.fused_merge``) that are bit-exact
+with the jnp lowering while making ~9 logical HBM passes over the [C, n]
+update matrix instead of ~35; the jnp path stays as the parity reference.
 """
 from __future__ import annotations
 
@@ -79,11 +83,16 @@ class ClientUpdateSpec:
         return self.strategy == "eftopk"
 
     @property
-    def use_ef_kernel(self) -> bool:
-        # the fused EF Pallas kernel selects per block at a static k — only a
-        # faithful route when the config already asks for block top-k; global
-        # top-k configs stay on the traced-k path so TPU matches CPU/legacy
-        return self.use_kernel and self.block_topk
+    def use_megakernel(self) -> bool:
+        # the traced-k Pallas pipeline (threshold_find + fused_merge) serves
+        # every global-top-k strategy at per-client traced ks — the paper's
+        # BCRS-faithful default. Block-top-k configs keep the traced-k jnp
+        # block path (per-block thresholds), and fedavg is already a single
+        # einsum pass. NOTE the old `use_ef_kernel` route (static-CR
+        # ef_update kernel) is gone: it silently compressed at spec.cr even
+        # when the schedule passed varying traced ks.
+        return (self.use_kernel and not self.block_topk
+                and self.strategy in ("topk", "eftopk", "bcrs", "bcrs_opwa"))
 
 
 def spec_for(acfg) -> ClientUpdateSpec:
@@ -172,29 +181,32 @@ def make_masked_local_trainer(loss_fn: Callable, lr: float):
     return local_train
 
 
-# -------------------------------------------------------- EF Pallas routing
-def ef_kernel_step(spec: ClientUpdateSpec, updates: jax.Array,
-                   residuals: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """Clients-as-rows fused EF Pallas step (uniform static CR)."""
-    from repro.kernels.ef_update import ROWS_TILE, ef_update_pallas
-    from repro.kernels.ops import _interpret
-    c, n = updates.shape
-    block = spec.block_size
-    kb = comp.k_for_ratio(block, spec.cr)
-    n_pad = (-n) % block
-    g = jnp.pad(updates, ((0, 0), (0, n_pad)))
-    e = jnp.pad(residuals, ((0, 0), (0, n_pad)))
-    nb = g.shape[1] // block
-    g2d = g.reshape(c * nb, block)
-    e2d = e.reshape(c * nb, block)
-    rpad = (-(c * nb)) % ROWS_TILE
-    if rpad:
-        g2d = jnp.pad(g2d, ((0, rpad), (0, 0)))
-        e2d = jnp.pad(e2d, ((0, rpad), (0, 0)))
-    send, new_e = ef_update_pallas(g2d, e2d, kb, interpret=_interpret())
-    send = send[:c * nb].reshape(c, nb * block)[:, :n]
-    new_e = new_e[:c * nb].reshape(c, nb * block)[:, :n]
-    return send, new_e
+# -------------------------------------------------------- megakernel routing
+def _aggregate_megakernel(spec: ClientUpdateSpec, updates: jax.Array,
+                          w: jax.Array, ks: jax.Array,
+                          residuals: Optional[jax.Array],
+                          active: Optional[jax.Array]
+                          ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Traced-k Pallas pipeline: exact per-client thresholds in 8 streamed
+    HBM sweeps (``threshold_find``), then EF correction, masking, overlap
+    counts, the OPWA mask, and the weighted merge in ONE further pass
+    (``fused_merge``) — bit-exact with the jnp path below, ~9 logical HBM
+    passes over [C, n] instead of ~35 (see repro.roofline.kernel_bytes).
+
+    This route REPLACES the old ``ef_kernel_step`` (static-CR ``ef_update``
+    kernel), which silently compressed at ``spec.cr`` even when the BCRS
+    schedule passed varying traced ``ks`` — the megakernel honors the traced
+    per-client counts exactly (regression-tested in
+    tests/test_megakernel.py)."""
+    if spec.strategy == "bcrs_opwa":
+        agg = opwa_mod.opwa_aggregate_traced_k(
+            updates, ks, w, spec.gamma, spec.overlap_d, active=active,
+            use_kernel=True)
+        return agg, residuals
+    from repro.kernels import ops as kops
+    agg, new_res = kops.megakernel_aggregate(
+        updates, ks, w, residuals=residuals, active=active)
+    return agg, (new_res if spec.needs_residuals else residuals)
 
 
 # ------------------------------------------------------------ flat-space path
@@ -217,6 +229,14 @@ def aggregate_updates(spec: ClientUpdateSpec, updates: jax.Array,
     Returns (agg [n] f32, new_residuals | None).
     """
     w = weights.astype(jnp.float32)
+    if spec.needs_residuals and residuals is None:
+        raise ValueError("eftopk needs residuals")
+    if spec.use_megakernel:
+        # traced-k Pallas pipeline: selection thresholds + the whole
+        # apply/merge in ~9 HBM passes; EF, OPWA, and active gating happen
+        # inside the kernels. Bit-exact with the jnp path below.
+        return _aggregate_megakernel(spec, updates, w, ks, residuals, active)
+
     compress = compress_batch_fn(spec)
     mask = None
     new_res = residuals
@@ -224,14 +244,9 @@ def aggregate_updates(spec: ClientUpdateSpec, updates: jax.Array,
     if spec.strategy == "fedavg":
         vals = updates
     elif spec.strategy == "eftopk":
-        if residuals is None:
-            raise ValueError("eftopk needs residuals")
-        if spec.use_ef_kernel:
-            vals, new_res = ef_kernel_step(spec, updates, residuals)
-        else:
-            c_obj, new_res = comp.ef_compress_batch(
-                residuals, updates, ks, compress_batch=compress)
-            vals, mask = c_obj.values, c_obj.mask
+        c_obj, new_res = comp.ef_compress_batch(
+            residuals, updates, ks, compress_batch=compress)
+        vals, mask = c_obj.values, c_obj.mask
         if active is not None:
             new_res = jnp.where(active[:, None], new_res, residuals)
     else:  # topk | bcrs | bcrs_opwa
@@ -295,15 +310,15 @@ class SimScan:
         self.spec = spec
         self.with_overlap = with_overlap
 
-    def __call__(self, flat, residuals, xs):
-        return self._fn(flat, residuals, xs)
+    def __call__(self, flat, residuals, evals, xs):
+        return self._fn(flat, residuals, evals, xs)
 
-    def compile(self, flat, residuals, xs):
+    def compile(self, flat, residuals, evals, xs):
         """AOT lower+compile for the given arguments. The returned compiled
         executable lets callers separate the one-off trace/compile cost from
         steady-state execution (``benchmarks.bench_round --sim-scan`` times
         the executable alone)."""
-        return self._fn.lower(flat, residuals, xs).compile()
+        return self._fn.lower(flat, residuals, evals, xs).compile()
 
 
 def make_sim_scan(loss_fn: Callable, params_template, *, lr: float,
@@ -319,15 +334,18 @@ def make_sim_scan(loss_fn: Callable, params_template, *, lr: float,
     composition, BCRS CR schedules, failure/straggler survivors) arrives as
     stacked ``[R, ...]`` scan xs. One compile, zero per-round dispatch.
 
-    Returned program signature (flat and residuals donated)::
+    Returned program signature (flat, residuals, and evals donated)::
 
         sim(flat [n] f32,
             residuals [C, n] f32 ([0] when the strategy carries no EF),
+            evals [E, n] f32 (zeros; E = number of host eval rounds >= 1),
             xs: {
               "step_mask"  [R, C, S] bool,   # padded-step validity
               "active"     [R, C]    bool,   # padded cohort-slot validity
               "weights"    [R, C]    f32,    # 0 at inactive slots
               "ks"         [R, C]    i32,
+              "eval_write" [R]       bool,   # snapshot the model this round
+              "eval_slot"  [R]       i32,    # evals row it lands in
               "reset_ef"   [R]       bool,   # eftopk only: cohort resized
               + whatever ``make_batches`` consumes (default: "batches", a
                 pytree of [R, C, S, ...] stacked client batches; the
@@ -335,12 +353,17 @@ def make_sim_scan(loss_fn: Callable, params_template, *, lr: float,
                 gather closure instead, which is ~250x smaller host->device),
               + with_overlap: "ks_overlap" [R, C] i32, "overlap_round" [R]
             })
-        -> {"flat": [n], "residuals": [C, n],
-            "ys": {"flat" [R, n], "loss" [R][, "overlap_counts" [R, n]]}}
+        -> {"flat": [n], "residuals": [C, n], "evals": [E, n],
+            "ys": {"loss" [R][, "overlap_counts" [R, n]]}}
 
-    ``ys["flat"][r]`` is the server model AFTER round r — the host picks its
-    eval rounds from it, so the accuracy trajectory is computed by the exact
-    same jitted eval as the per-round engines.
+    ``evals[xs["eval_slot"][r]]`` is the server model AFTER each round r
+    with ``eval_write``, so the accuracy trajectory is computed by the exact
+    same jitted eval as the per-round engines. The buffer is carried through
+    the scan and indexed by eval slot — O(E x n) device memory instead of
+    the O(rounds x n) a per-round ``ys["flat"]`` stack would cost (asserted
+    in tests/test_sim_scan.py). Eval bookkeeping is read from the RAW xs
+    row, never from ``plan_fn``'s output, so traced-sampling plans need not
+    thread it through.
 
     Rounds skipped by failure injection (empty cohort) should simply not be
     included in the xs — the carry is untouched by construction, which
@@ -360,7 +383,7 @@ def make_sim_scan(loss_fn: Callable, params_template, *, lr: float,
     ef = spec.needs_residuals
 
     def body(carry, x):
-        flat, res = carry
+        flat, res, evals = carry
         p = plan_fn(x) if plan_fn is not None else x
         params = unflatten(flat)
         deltas, losses = jax.vmap(local_train, in_axes=(None, 0, 0))(
@@ -376,9 +399,16 @@ def make_sim_scan(loss_fn: Callable, params_template, *, lr: float,
             residuals=res_in if ef else None, active=active)
         new_flat = flat - eta * agg
 
+        # eval-round snapshot: O(E x n) carried buffer instead of emitting
+        # the model every round (eval fields come from the raw xs row)
+        evals = jax.lax.cond(
+            x["eval_write"],
+            lambda ev: ev.at[x["eval_slot"]].set(new_flat),
+            lambda ev: ev, evals)
+
         n_act = jnp.maximum(jnp.sum(active.astype(jnp.int32)), 1)
         loss = jnp.sum(jnp.where(active, losses, 0.0)) / n_act
-        ys = {"flat": new_flat, "loss": loss}
+        ys = {"loss": loss}
         # a traced plan_fn can surface per-round plan facts (e.g. the in-jit
         # sampled cohort) to the host via "ys_extra"
         if "ys_extra" in p:
@@ -396,13 +426,15 @@ def make_sim_scan(loss_fn: Callable, params_template, *, lr: float,
                 p["overlap_round"], counts_fn,
                 lambda args: jnp.zeros((updates.shape[1],), jnp.int32),
                 (updates, p["ks_overlap"], active))
-        return (new_flat, new_res if ef else res), ys
+        return (new_flat, new_res if ef else res, evals), ys
 
-    def _sim(flat, residuals, xs):
+    def _sim(flat, residuals, evals, xs):
         # host side effect: runs only at trace time
         TRACE_COUNTS[("sim_scan", spec.strategy, with_overlap)] += 1
-        (flat, residuals), ys = jax.lax.scan(body, (flat, residuals), xs)
-        return {"flat": flat, "residuals": residuals, "ys": ys}
+        (flat, residuals, evals), ys = jax.lax.scan(
+            body, (flat, residuals, evals), xs)
+        return {"flat": flat, "residuals": residuals, "evals": evals,
+                "ys": ys}
 
-    fn = jax.jit(_sim, donate_argnums=(0, 1))
+    fn = jax.jit(_sim, donate_argnums=(0, 1, 2))
     return SimScan(fn, spec, with_overlap)

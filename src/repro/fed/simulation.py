@@ -256,6 +256,21 @@ def _stack_client_batches(clients, selected, sim: FLSimConfig,
     return batches, mask
 
 
+def _is_eval_round(sim: FLSimConfig, rnd: int) -> bool:
+    """The ONE definition of the eval cadence — every engine's accuracy
+    trajectory samples exactly these rounds."""
+    return rnd % sim.eval_every == 0 or rnd == sim.rounds - 1
+
+
+def _eval_plan(sim: FLSimConfig, rnds) -> Tuple[np.ndarray, np.ndarray]:
+    """(eval_write bool [len(rnds)], eval_slot i32 [len(rnds)]) for the given
+    executed round numbers — the scan engines' snapshot schedule."""
+    write = np.array([_is_eval_round(sim, r) for r in rnds], bool)
+    slot = np.zeros((len(write),), np.int32)
+    slot[write] = np.arange(int(write.sum()), dtype=np.int32)
+    return write, slot
+
+
 def _overlap_hist(counts: np.ndarray, cohort_size: int) -> np.ndarray:
     """Fig. 4 binning shared by every engine: histogram of the nonzero
     degrees of overlap, padded to cohort_size+1 bins (degree 0 dropped)."""
@@ -362,7 +377,7 @@ def run_fl(sim: FLSimConfig, acfg: agg_mod.AggregationConfig,
         result.wall_per_round.append(time.perf_counter() - t0)
         result.executed_rounds.append(rnd)
 
-        if rnd % sim.eval_every == 0 or rnd == sim.rounds - 1:
+        if _is_eval_round(sim, rnd):
             acc = float(mlp_accuracy(server.params, jnp.asarray(x_test),
                                      jnp.asarray(y_test)))
             result.accuracies.append((rnd, acc))
@@ -433,6 +448,11 @@ def _run_scan(sim, acfg, rng, clients, parts, fracs_all, links, server,
     if collect_overlap:
         xs["ks_overlap"] = np.ones((r_exec, c_max), np.int32)
         xs["overlap_round"] = np.zeros((r_exec,), bool)
+    # eval-round snapshots land in an O(E x n) carried buffer (the scanned
+    # program no longer emits the model every round)
+    xs["eval_write"], xs["eval_slot"] = _eval_plan(sim,
+                                                   [p[0] for p in plans])
+    n_evals = int(xs["eval_write"].sum())
     prev_c = None
     for i, (rnd, selected, weights, ks, ks_overlap, idx) in enumerate(plans):
         c_r = len(selected)
@@ -463,24 +483,26 @@ def _run_scan(sim, acfg, rng, clients, parts, fracs_all, links, server,
         with_overlap=collect_overlap, make_batches=gather_batches)
     residuals0 = (jnp.zeros((c_max, n_params), jnp.float32) if ef
                   else jnp.zeros((0,), jnp.float32))
+    evals0 = jnp.zeros((max(n_evals, 1), n_params), jnp.float32)
     xs_dev = {k: jnp.asarray(v) for k, v in xs.items()}
     # AOT-compile so wall_per_round reports the steady-state per-round cost
     # of the compiled trajectory (trace/compile is a one-off, just like the
     # fused engine's warmup rounds that benchmarks discard)
-    compiled = sim_fn.compile(server._flat, residuals0, xs_dev)
+    compiled = sim_fn.compile(server._flat, residuals0, evals0, xs_dev)
     t_exec0 = time.perf_counter()
-    out = compiled(server._flat, residuals0, xs_dev)
+    out = compiled(server._flat, residuals0, evals0, xs_dev)
     out["flat"].block_until_ready()
     wall = time.perf_counter() - t_exec0
 
     # --------------------------------------------------------- host post
     server._flat = out["flat"]
     server.params = server._unravel(server._flat)
-    flats = out["ys"]["flat"]
+    evals_out = out["evals"]
     xt, yt = jnp.asarray(x_test), jnp.asarray(y_test)
     for i, (rnd, selected, *_rest) in enumerate(plans):
-        if rnd % sim.eval_every == 0 or rnd == sim.rounds - 1:
-            acc = float(mlp_accuracy(server._unravel(flats[i]), xt, yt))
+        if xs["eval_write"][i]:
+            snap = evals_out[int(xs["eval_slot"][i])]
+            acc = float(mlp_accuracy(server._unravel(snap), xt, yt))
             result.accuracies.append((rnd, acc))
     result.executed_rounds = [p[0] for p in plans]
     result.wall_per_round = [wall / r_exec] * r_exec
@@ -590,17 +612,24 @@ def run_fl_traced(sim: FLSimConfig, acfg: agg_mod.AggregationConfig,
     ef = acfg.strategy == "eftopk"
     residuals0 = (jnp.zeros((n_draw, n_params), jnp.float32) if ef
                   else jnp.zeros((0,), jnp.float32))
+    # eval bookkeeping is host-known even under traced sampling: the scanned
+    # program snapshots eval rounds into the O(E x n) carried buffer
+    eval_write, eval_slot = _eval_plan(sim, range(sim.rounds))
+    evals0 = jnp.zeros((max(int(eval_write.sum()), 1), n_params),
+                       jnp.float32)
     t0 = time.perf_counter()
-    out = sim_fn(server._flat, residuals0,
+    out = sim_fn(server._flat, residuals0, evals0,
                  {"key": jax.random.split(jax.random.fold_in(key, 1),
-                                          sim.rounds)})
+                                          sim.rounds),
+                  "eval_write": jnp.asarray(eval_write),
+                  "eval_slot": jnp.asarray(eval_slot)})
     out["flat"].block_until_ready()
     wall = time.perf_counter() - t0
 
     result = FLSimResult()
     server._flat = out["flat"]
     server.params = server._unravel(server._flat)
-    flats = out["ys"]["flat"]
+    evals_out = out["evals"]
     cohorts = np.asarray(out["ys"]["cohort"])
     arrived = np.asarray(out["ys"]["arrived"])
     xt, yt = jnp.asarray(x_test), jnp.asarray(y_test)
@@ -617,8 +646,9 @@ def run_fl_traced(sim: FLSimConfig, acfg: agg_mod.AggregationConfig,
                 info_r["crs"] = np.asarray(crs_all)[sel]
             server._account_time(info_r, [links[c] for c in sel])
             result.executed_rounds.append(rnd)
-        if rnd % sim.eval_every == 0 or rnd == sim.rounds - 1:
-            acc = float(mlp_accuracy(server._unravel(flats[rnd]), xt, yt))
+        if eval_write[rnd]:
+            snap = evals_out[int(eval_slot[rnd])]
+            acc = float(mlp_accuracy(server._unravel(snap), xt, yt))
             result.accuracies.append((rnd, acc))
     result.wall_per_round = ([wall / len(result.executed_rounds)]
                              * len(result.executed_rounds)

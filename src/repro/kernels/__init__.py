@@ -1,9 +1,18 @@
 """Pallas TPU kernels for the compression hot path:
 
-  block_topk       per-VMEM-block magnitude Top-K via threshold bisection
+  threshold_find   exact per-client k-th-magnitude thresholds at TRACED k
+                   (16-ary bit-pattern bisection, 8 streamed sweeps)
+  fused_merge      traced-k apply/merge megakernel: EF correction, Top-K
+                   masking, overlap counts, OPWA mask, and the weighted
+                   aggregate in ONE pass over each (updates, residuals) tile
+  block_topk       per-VMEM-block magnitude Top-K at static k
   overlap_combine  fused OPWA aggregation (counts + mask + weighted sum)
-  ef_update        fused error-feedback Top-K step
+  ef_update        fused error-feedback Top-K step at static k
 
-Each has a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py; validated
-in interpret mode on CPU, targeted at TPU VMEM tiling (8 x 128 lanes).
+``threshold_find`` + ``fused_merge`` form the traced-k megakernel pipeline
+behind ``fed.engine.aggregate_updates`` — the route that serves the paper's
+bandwidth-adaptive per-client CRs; the three static-k kernels are the
+special cases it subsumes. Each kernel has a pure-jnp oracle in ref.py and a
+jit'd wrapper in ops.py; validated in interpret mode on CPU, targeted at TPU
+VMEM tiling (8 x 128 lanes).
 """

@@ -1,0 +1,137 @@
+"""Pallas TPU megakernel: fused traced-k apply + merge for the client-update
+hot path (paper Alg. 1 lines 14-18 in ONE HBM pass).
+
+Given the per-client k-th-magnitude thresholds from ``threshold_find``, the
+unfused XLA path still makes 4-6 more full passes over the [C, n] update
+matrix: EF correction, mask materialization, masked values, overlap counts,
+the coefficient-weighted sum, and the OPWA multiply each round-trip HBM.
+This kernel reads each (updates, residuals) tile once and produces, per
+n-tile and entirely in VMEM:
+
+    corrected = residuals + updates          (EF configs)
+    mask      = bitcast(|corrected|) >= threshold   (ties kept)
+    send      = corrected . mask             (x active-row gating)
+    counts    = sum_c mask                   (degree of overlap)
+    M         = gamma where 0 < counts <= D else 1   (OPWA, Alg. 3)
+    agg       = M . sum_c w_c * send         (coefficient-weighted merge)
+    residual' = corrected - send             (inactive rows pass through)
+
+writing only the aggregate tile [1, T] (plus the residual tile for EF
+configs) back to HBM. It generalizes and subsumes the three static-k kernels
+(``block_topk``'s selection, ``ef_update``'s EF arithmetic,
+``overlap_combine``'s merge) at traced per-client k.
+
+Bit-exactness contract (asserted in tests/test_megakernel.py): every
+intermediate uses the same op sequence as the jnp reference in
+``fed.engine.aggregate_updates`` — in particular the weighted sum is a
+dot_general ([1,C] @ [C,T]), which XLA lowers identically to the reference's
+``einsum("k,kn->n")`` — so agg and residuals match the traced jnp path bit
+for bit, per-tile, including the all-True tie masks of all-zero rows.
+
+``active`` gating mirrors the engine's padded-cohort semantics: inactive
+rows contribute nothing to the merge or the overlap counts and their
+residuals pass through unchanged; it is a multiply by exactly 1.0/0.0, so
+fully-active cohorts are bit-identical to the ungated arithmetic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_N = 1024
+
+
+def _fused_merge_kernel(ef: bool, opwa: bool, gamma: float, d: int,
+                        has_active: bool, *refs):
+    refs = list(refs)
+    x_ref = refs.pop(0)
+    e_ref = refs.pop(0) if ef else None
+    th_ref = refs.pop(0)
+    w_ref = refs.pop(0)
+    act_ref = refs.pop(0) if has_active else None
+    agg_ref = refs.pop(0)
+    newres_ref = refs.pop(0) if ef else None
+
+    x = x_ref[...].astype(jnp.float32)                      # [C, T]
+    corrected = e_ref[...].astype(jnp.float32) + x if ef else x
+    bits = jax.lax.bitcast_convert_type(jnp.abs(corrected), jnp.uint32)
+    mask = bits >= th_ref[...]                              # [C, T]
+    vals = jnp.where(mask, corrected, jnp.float32(0.0))
+
+    if ef:
+        new_res = corrected - vals
+        if has_active:
+            act_b = act_ref[...] > jnp.float32(0.5)         # [C, 1]
+            new_res = jnp.where(act_b, new_res, e_ref[...])
+        newres_ref[...] = new_res
+    if has_active:
+        act_b = act_ref[...] > jnp.float32(0.5)
+        # padded rows are all-zero updates whose tie-at-zero Top-K mask is
+        # all-True — gate them out of the merge and the overlap counts
+        vals = vals * act_ref[...]
+        mask = mask & act_b
+
+    # [1, C] @ [C, T]: the same dot_general the reference einsum lowers to
+    weighted = jax.lax.dot_general(
+        w_ref[...], vals, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                 # [1, T]
+    if opwa:
+        counts = jnp.sum(mask.astype(jnp.int32), axis=0, keepdims=True)
+        amplify = (counts > 0) & (counts <= d)
+        m = jnp.where(amplify, jnp.float32(gamma), jnp.float32(1.0))
+        agg_ref[...] = m * weighted
+    else:
+        agg_ref[...] = weighted
+
+
+def fused_merge_pallas(x2d: jax.Array, thresholds: jax.Array,
+                       weights: jax.Array,
+                       e2d: jax.Array | None = None,
+                       active: jax.Array | None = None,
+                       *, opwa: bool = False, gamma: float = 1.0, d: int = 1,
+                       interpret: bool = True):
+    """x2d: [C, n] f32 (n % TILE_N == 0, zero-padded tail); thresholds:
+    [C, 1] uint32 bit-pattern thresholds (from ``threshold_find_pallas``);
+    weights: [C, 1] f32 merge coefficients; e2d: optional EF residuals
+    [C, n]; active: optional [C, 1] f32 row gate (exactly 1.0 / 0.0).
+
+    Returns agg [1, n] f32, or (agg, new_residuals [C, n]) when ``e2d`` is
+    given.
+    """
+    c, n = x2d.shape
+    assert n % TILE_N == 0, f"n={n} must be a multiple of {TILE_N}"
+    ef = e2d is not None
+    has_active = active is not None
+    grid = (n // TILE_N,)
+    tile = pl.BlockSpec((c, TILE_N), lambda t: (0, t))
+    col = pl.BlockSpec((c, 1), lambda t: (0, 0))
+
+    in_specs, args = [tile], [x2d]
+    if ef:
+        in_specs.append(tile)
+        args.append(e2d)
+    in_specs += [col, col]
+    args += [thresholds, weights.astype(jnp.float32)]
+    if has_active:
+        in_specs.append(col)
+        args.append(active.astype(jnp.float32))
+
+    out_specs = [pl.BlockSpec((1, TILE_N), lambda t: (0, t))]
+    out_shape = [jax.ShapeDtypeStruct((1, n), jnp.float32)]
+    if ef:
+        out_specs.append(tile)
+        out_shape.append(jax.ShapeDtypeStruct((c, n), jnp.float32))
+
+    out = pl.pallas_call(
+        functools.partial(_fused_merge_kernel, ef, opwa, float(gamma),
+                          int(d), has_active),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*args)
+    return (out[0], out[1]) if ef else out[0]

@@ -12,7 +12,11 @@ from repro.core.compression import Compressed, k_for_ratio
 from repro.kernels.block_topk import ROWS_TILE, block_topk_pallas
 from repro.kernels.ef_update import ef_update_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.fused_merge import fused_merge_pallas
+from repro.kernels.fused_merge import TILE_N as MERGE_TILE
 from repro.kernels.overlap_combine import TILE_N, overlap_combine_pallas
+from repro.kernels.threshold_find import threshold_find_pallas
+from repro.kernels.threshold_find import TILE_N as THRESH_TILE
 
 
 def _interpret() -> bool:
@@ -53,6 +57,62 @@ def overlap_combine(vals: jax.Array, masks: jax.Array, coeffs: jax.Array,
                                  float(gamma), int(d),
                                  interpret=_interpret())
     return out[0, :n]
+
+
+# ------------------------------------------------- traced-k megakernel pipeline
+@jax.jit
+def topk_thresholds(updates: jax.Array, ks: jax.Array,
+                    residuals: jax.Array | None = None) -> jax.Array:
+    """[C, n] updates + traced [C] retained counts -> exact per-client
+    k-th-|.| bit-pattern thresholds u32 [C] (of ``residuals + updates`` when
+    residuals are given). The Top-K mask is
+    ``bitcast(|x|, u32) >= thresholds[:, None]`` — bit-identical to
+    ``topk_compress_dynamic`` in 8 streamed HBM sweeps instead of 32."""
+    c, n = updates.shape
+    n_pad = (-n) % THRESH_TILE
+    up = jnp.pad(updates.astype(jnp.float32), ((0, 0), (0, n_pad)))
+    ep = (jnp.pad(residuals.astype(jnp.float32), ((0, 0), (0, n_pad)))
+          if residuals is not None else None)
+    th = threshold_find_pallas(up, ks.reshape(c, 1), ep,
+                               interpret=_interpret())
+    return th[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("opwa", "gamma", "d"))
+def megakernel_aggregate(updates: jax.Array, ks: jax.Array,
+                         weights: jax.Array,
+                         residuals: jax.Array | None = None,
+                         active: jax.Array | None = None,
+                         *, opwa: bool = False, gamma: float = 1.0,
+                         d: int = 1):
+    """Whole flat-space client merge through the two-kernel pipeline:
+    threshold-find (8 HBM sweeps) + fused apply/merge (1 pass) — vs the
+    ~35 passes of the unfused XLA lowering (see repro.roofline.kernel_bytes).
+
+    updates [C, n] f32; ks [C] i32 traced; weights [C] f32; residuals
+    optional [C, n] (switches on EF arithmetic and the new-residual output);
+    active optional bool [C] (padded-cohort gating, engine semantics).
+
+    Returns (agg [n] f32, new_residuals [C, n] | None) — bit-exact with the
+    jnp path of ``fed.engine.aggregate_updates``.
+    """
+    c, n = updates.shape
+    n_pad = (-n) % MERGE_TILE
+    up = jnp.pad(updates.astype(jnp.float32), ((0, 0), (0, n_pad)))
+    ep = (jnp.pad(residuals.astype(jnp.float32), ((0, 0), (0, n_pad)))
+          if residuals is not None else None)
+    # MERGE_TILE is a multiple of THRESH_TILE: one padding serves both
+    th = threshold_find_pallas(up, ks.reshape(c, 1), ep,
+                               interpret=_interpret())
+    act = (active.astype(jnp.float32).reshape(c, 1)
+           if active is not None else None)
+    out = fused_merge_pallas(up, th, weights.astype(jnp.float32)
+                             .reshape(c, 1), ep, act, opwa=opwa,
+                             gamma=gamma, d=d, interpret=_interpret())
+    if residuals is None:
+        return out[0, :n], None
+    agg, new_res = out
+    return agg[0, :n], new_res[:, :n]
 
 
 @functools.partial(jax.jit, static_argnames=("cr", "block"))

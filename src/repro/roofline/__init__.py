@@ -1,6 +1,11 @@
 from repro.roofline.analysis import (DCN_BW, HBM_BW, ICI_BW, PEAK_FLOPS,
                                      CollectiveSummary, Roofline, analyze,
                                      model_flops, parse_collectives)
+from repro.roofline.kernel_bytes import (megakernel_hbm_bytes,
+                                         merge_traffic_ratio,
+                                         unfused_merge_bytes)
 
 __all__ = ["analyze", "parse_collectives", "model_flops", "Roofline",
-           "CollectiveSummary", "PEAK_FLOPS", "HBM_BW", "ICI_BW", "DCN_BW"]
+           "CollectiveSummary", "PEAK_FLOPS", "HBM_BW", "ICI_BW", "DCN_BW",
+           "megakernel_hbm_bytes", "unfused_merge_bytes",
+           "merge_traffic_ratio"]

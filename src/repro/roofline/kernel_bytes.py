@@ -1,0 +1,107 @@
+"""HBM-traffic accounting for the client-merge hot path: the traced-k Pallas
+megakernel pipeline vs the unfused XLA lowering of ``aggregate_updates``.
+
+Two complementary accountings, compared in ``BENCH_kernels.json``:
+
+  * ``megakernel_hbm_bytes`` — the kernel pipeline's DMA traffic, computed
+    analytically from its grid/block structure. Pallas fetches every
+    declared input block and flushes every output block once per grid step,
+    so the byte count is exact by construction (it is the same model
+    ``pl.CostEstimate`` uses): threshold-find streams the [C, n] operands
+    once per bisection sweep; fused-merge reads them once more and writes
+    only the aggregate (plus the EF residual tile).
+
+  * ``unfused_merge_bytes`` — the jnp path, measured from the compiled HLO
+    via ``repro.roofline.hlo_cost.analyze_hlo``. XLA's own
+    ``cost_analysis()`` counts while-loop bodies ONCE regardless of trip
+    count, hiding 32x of the traced-k bisection's traffic — exactly the
+    distortion hlo_cost exists to undo — so the trip-count-aware number is
+    the honest unfused baseline. The uncorrected ``cost_analysis`` number is
+    reported alongside it for transparency.
+
+Both accountings are per logical execution of the merge (one cohort, one
+round) on one device.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.roofline.hlo_cost import analyze_hlo
+
+_F32 = 4
+_I32 = 4
+_U32 = 4
+
+
+def _pad_to(n: int, tile: int) -> int:
+    return n + ((-n) % tile)
+
+
+def megakernel_hbm_bytes(c: int, n: int, strategy: str) -> dict:
+    """Analytic DMA bytes of the two-kernel pipeline for one [C, n] merge.
+
+    Returns ``{"threshold", "merge", "total", "passes"}`` where ``passes``
+    is total / (C*n*4) — logical full reads of the update matrix.
+    """
+    from repro.kernels.fused_merge import TILE_N as MERGE_TILE
+    from repro.kernels.threshold_find import SWEEPS
+    ef = strategy == "eftopk"
+    n_pad = _pad_to(n, MERGE_TILE)  # one padding serves both kernels
+    mat = c * n_pad * _F32
+    n_ops = 2 if ef else 1          # (updates[, residuals]) streamed tiles
+    # threshold-find: every sweep streams the [C, n] operand tiles; the
+    # [C, 1] ks/lo/threshold scalars ride along once per grid step
+    thresh = SWEEPS * n_ops * mat + c * (_I32 + _U32)
+    # fused merge: one read of the operands + per-grid-step [C, 1] columns,
+    # one write of the [1, n] aggregate (+ the [C, n] EF residual update)
+    merge = n_ops * mat + n_pad * _F32 + c * (_U32 + 2 * _F32)
+    if ef:
+        merge += mat                # new_residuals write
+    total = thresh + merge
+    return {"threshold": float(thresh), "merge": float(merge),
+            "total": float(total), "passes": total / (c * n * _F32)}
+
+
+def unfused_merge_bytes(spec, c: int, n: int,
+                        platform: Optional[str] = None) -> dict:
+    """Trip-count-aware HBM bytes of the unfused (jnp) ``aggregate_updates``
+    lowering for a [C, n] merge, plus XLA's uncorrected ``cost_analysis``
+    number. ``spec``: a ``fed.engine.ClientUpdateSpec`` with
+    ``use_kernel=False``.
+    """
+    from repro.fed.engine import aggregate_updates
+    assert not spec.use_kernel, "baseline must be the jnp lowering"
+    u = jnp.zeros((c, n), jnp.float32)
+    w = jnp.ones((c,), jnp.float32) / c
+    ks = jnp.ones((c,), jnp.int32)
+    args = [u, w, ks]
+    if spec.needs_residuals:
+        fn = jax.jit(lambda u, w, ks, r: aggregate_updates(
+            spec, u, w, ks, residuals=r))
+        args.append(jnp.zeros((c, n), jnp.float32))
+    else:
+        fn = jax.jit(lambda u, w, ks: aggregate_updates(spec, u, w, ks))
+    compiled = fn.lower(*args).compile()
+    cost = analyze_hlo(compiled.as_text(), 1)
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    xla_bytes = float(ca.get("bytes accessed", 0.0))
+    return {"total": float(cost.bytes),
+            "passes": cost.bytes / (c * n * _F32),
+            "xla_cost_analysis": xla_bytes,
+            "xla_cost_analysis_passes": xla_bytes / (c * n * _F32)}
+
+
+def merge_traffic_ratio(spec, c: int, n: int) -> dict:
+    """unfused / kernel HBM-byte ratio for one [C, n] merge (>= 3x is the
+    acceptance bar for the megakernel pipeline)."""
+    kern = megakernel_hbm_bytes(c, n, spec.strategy)
+    base = unfused_merge_bytes(spec, c, n)
+    return {"c": c, "n": n, "strategy": spec.strategy,
+            "kernel": kern, "unfused": base,
+            "ratio": base["total"] / kern["total"]}

@@ -1,0 +1,307 @@
+"""Traced-k Pallas megakernel pipeline: bit-exact parity with the jnp
+reference path across every strategy, per-client ks pattern, and padding
+edge, plus the regression for the old static-CR EF-kernel route.
+
+Everything runs the kernels in interpret mode (this suite executes on CPU);
+the jnp path of ``fed.engine.aggregate_updates`` is the parity oracle.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hyputil import given, settings, st
+
+from repro.core import compression as C
+from repro.core.opwa import opwa_aggregate_traced_k
+from repro.fed import engine
+from repro.kernels import ops, ref
+from repro.kernels.fused_merge import fused_merge_pallas
+from repro.kernels.threshold_find import threshold_find_pallas
+
+STRATEGIES = ("fedavg", "topk", "eftopk", "bcrs", "bcrs_opwa")
+
+
+def _bits(x):
+    return jax.lax.bitcast_convert_type(
+        jnp.abs(jnp.asarray(x, jnp.float32)), jnp.uint32)
+
+
+def _case(c, n, seed=0, scale=1.0):
+    key = jax.random.PRNGKey(seed)
+    ku, ke, kw, kk = jax.random.split(key, 4)
+    u = jax.random.normal(ku, (c, n)) * scale
+    e = jax.random.normal(ke, (c, n)) * 0.3 * scale
+    w = jax.random.uniform(kw, (c,)) + 0.1
+    w = w / jnp.sum(w)
+    ks = jax.random.randint(kk, (c,), 1, n + 1).astype(jnp.int32)
+    return u, e, w, ks
+
+
+class TestThresholdFind:
+    @pytest.mark.parametrize("c,n", [(1, 512), (8, 4096), (16, 1024),
+                                     (3, 512 * 7)])
+    def test_vs_ref(self, c, n):
+        u, e, _, ks = _case(c, n, seed=c * 100 + n)
+        th = threshold_find_pallas(u, ks.reshape(c, 1), interpret=True)
+        np.testing.assert_array_equal(np.asarray(th),
+                                      np.asarray(ref.threshold_find_ref(u, ks)))
+        # EF variant selects on corrected = residuals + updates
+        th_ef = threshold_find_pallas(u, ks.reshape(c, 1), e, interpret=True)
+        np.testing.assert_array_equal(
+            np.asarray(th_ef), np.asarray(ref.threshold_find_ref(u, ks, e)))
+
+    @pytest.mark.parametrize("k", [1, 2, 511, 512])
+    def test_k_edges_exact_mask(self, k):
+        u, _, _, _ = _case(4, 512, seed=k)
+        ks = jnp.full((4,), k, jnp.int32)
+        th = threshold_find_pallas(u, ks.reshape(4, 1), interpret=True)
+        mask = _bits(u) >= th
+        np.testing.assert_array_equal(
+            np.asarray(mask),
+            np.asarray(C.topk_compress_batch(u, ks).mask))
+
+    def test_ties_zeros_and_scales(self):
+        u, _, _, _ = _case(6, 1024, seed=7)
+        u = u.at[0].set(0.0)                       # all-zero row
+        u = u.at[1, :500].set(u[1, 0])             # heavy ties
+        u = u.at[2].mul(1e-40)                     # subnormal magnitudes
+        u = u.at[3].mul(1e30)
+        ks = jnp.asarray([5, 500, 13, 1, 1024, 512], jnp.int32)
+        th = threshold_find_pallas(u, ks.reshape(6, 1), interpret=True)
+        np.testing.assert_array_equal(np.asarray(th),
+                                      np.asarray(ref.threshold_find_ref(u, ks)))
+
+    def test_wrapper_pads_ragged_n(self):
+        u, e, _, ks = _case(5, 700, seed=3)
+        th = ops.topk_thresholds(u, ks)
+        np.testing.assert_array_equal(
+            np.asarray(th), np.asarray(ref.threshold_find_ref(u, ks))[:, 0])
+        th_ef = ops.topk_thresholds(u, ks, residuals=e)
+        np.testing.assert_array_equal(
+            np.asarray(th_ef),
+            np.asarray(ref.threshold_find_ref(u, ks, e))[:, 0])
+
+
+class TestFusedMerge:
+    @pytest.mark.parametrize("opwa", [False, True])
+    @pytest.mark.parametrize("ef", [False, True])
+    @pytest.mark.parametrize("gated", [False, True])
+    def test_vs_ref(self, opwa, ef, gated):
+        c, n = 7, 2048
+        u, e, w, ks = _case(c, n, seed=11)
+        active = (jnp.asarray([True] * 5 + [False] * 2) if gated else None)
+        if gated:
+            u = u * active[:, None]                # padded rows are zero
+        th = ref.threshold_find_ref(u, ks, e if ef else None)
+        act_f = active.astype(jnp.float32).reshape(c, 1) if gated else None
+        out = fused_merge_pallas(u, th, w.reshape(c, 1),
+                                 e if ef else None, act_f,
+                                 opwa=opwa, gamma=4.0, d=2, interpret=True)
+        want = ref.fused_merge_ref(u, th, w, e if ef else None,
+                                   active if gated else None,
+                                   opwa=opwa, gamma=4.0, d=2)
+        if ef:
+            np.testing.assert_array_equal(np.asarray(out[0]),
+                                          np.asarray(want[0]))
+            np.testing.assert_array_equal(np.asarray(out[1]),
+                                          np.asarray(want[1]))
+        else:
+            np.testing.assert_array_equal(np.asarray(out),
+                                          np.asarray(want))
+
+
+def _agg_both(strategy, u, w, ks, residuals=None, active=None, **spec_kw):
+    """aggregate_updates through the kernel route and the jnp reference."""
+    res = dict()
+    for use_kernel in (False, True):
+        spec = engine.ClientUpdateSpec(strategy=strategy,
+                                       use_kernel=use_kernel, **spec_kw)
+        res[use_kernel] = engine.aggregate_updates(
+            spec, u, w, ks, residuals=residuals, active=active)
+    return res
+
+
+class TestAggregateUpdatesParity:
+    """Kernel-routed aggregate_updates must match the traced jnp path BIT
+    FOR BIT for all five strategies with per-client traced ks."""
+
+    @pytest.mark.parametrize("strategy", STRATEGIES)
+    def test_bit_exact(self, strategy):
+        u, e, w, ks = _case(9, 3000, seed=21)
+        residuals = e if strategy == "eftopk" else None
+        out = _agg_both(strategy, u, w, ks, residuals=residuals, gamma=5.0)
+        np.testing.assert_array_equal(np.asarray(out[True][0]),
+                                      np.asarray(out[False][0]))
+        if strategy == "eftopk":
+            np.testing.assert_array_equal(np.asarray(out[True][1]),
+                                          np.asarray(out[False][1]))
+
+    @pytest.mark.parametrize("strategy", STRATEGIES)
+    def test_bit_exact_with_active_padding(self, strategy):
+        c_act, c_pad, n = 5, 3, 2048
+        u, e, w, ks = _case(c_act + c_pad, n, seed=33)
+        active = jnp.asarray([True] * c_act + [False] * c_pad)
+        u = u * active[:, None]
+        w = jnp.where(active, w, 0.0)
+        residuals = e if strategy == "eftopk" else None
+        out = _agg_both(strategy, u, w, ks, residuals=residuals,
+                        active=active, gamma=3.0, overlap_d=2)
+        np.testing.assert_array_equal(np.asarray(out[True][0]),
+                                      np.asarray(out[False][0]))
+        if strategy == "eftopk":
+            # inactive rows' residuals pass through unchanged on both routes
+            np.testing.assert_array_equal(np.asarray(out[True][1]),
+                                          np.asarray(out[False][1]))
+            np.testing.assert_array_equal(
+                np.asarray(out[True][1][c_act:]), np.asarray(e[c_act:]))
+
+    def test_k_extremes_and_ties(self):
+        u, e, w, _ = _case(4, 1024, seed=5)
+        u = u.at[2].set(0.0)
+        u = u.at[3, :700].set(u[3, 0])
+        ks = jnp.asarray([1, 1024, 512, 700], jnp.int32)
+        for strategy in ("topk", "bcrs_opwa", "eftopk"):
+            residuals = e if strategy == "eftopk" else None
+            out = _agg_both(strategy, u, w, ks, residuals=residuals)
+            np.testing.assert_array_equal(np.asarray(out[True][0]),
+                                          np.asarray(out[False][0]))
+
+
+class TestEFKernelKsRegression:
+    """The old ``use_ef_kernel`` route compressed at the STATIC spec.cr,
+    silently ignoring varying traced ks. Both kernel-on EF configs must now
+    honor the per-client counts exactly."""
+
+    def _varying(self):
+        u, e, w, _ = _case(6, 4096, seed=44)
+        # strongly varying BCRS-style retained counts — the old route kept
+        # k_for_ratio(block, cr)=410 per block for every client
+        ks = jnp.asarray([1, 41, 410, 1200, 3000, 4096], jnp.int32)
+        return u, e, w, ks
+
+    def test_global_ef_kernel_honors_traced_ks(self):
+        u, e, w, ks = self._varying()
+        out = _agg_both("eftopk", u, w, ks, residuals=e, cr=0.1)
+        np.testing.assert_array_equal(np.asarray(out[True][0]),
+                                      np.asarray(out[False][0]))
+        np.testing.assert_array_equal(np.asarray(out[True][1]),
+                                      np.asarray(out[False][1]))
+
+    def test_block_ef_kernel_config_honors_traced_ks(self):
+        u, e, w, _ = self._varying()
+        ks_block = jnp.asarray([1, 8, 64, 256, 410, 512], jnp.int32)
+        out = _agg_both("eftopk", u, w, ks_block, residuals=e,
+                        cr=0.1, block_topk=True, block_size=512)
+        np.testing.assert_array_equal(np.asarray(out[True][0]),
+                                      np.asarray(out[False][0]))
+        np.testing.assert_array_equal(np.asarray(out[True][1]),
+                                      np.asarray(out[False][1]))
+
+    def test_retained_counts_follow_ks_not_cr(self):
+        """Direct symptom check: retained count per client == ks, not the
+        static-CR count the old kernel route produced."""
+        u, e, _, ks = self._varying()
+        spec = engine.ClientUpdateSpec(strategy="eftopk", use_kernel=True,
+                                       cr=0.1)
+        comp_obj, _ = C.ef_compress_batch(e, u, ks, use_kernel=True)
+        kept = np.asarray(jnp.sum(comp_obj.mask, axis=1))
+        np.testing.assert_array_equal(kept, np.asarray(ks))
+        assert spec.use_megakernel
+
+
+class TestCompressionKernelRoutes:
+    def test_topk_compress_batch_kernel_route(self):
+        u, _, _, ks = _case(5, 3333, seed=9)
+        a = C.topk_compress_batch(u, ks)
+        b = C.topk_compress_batch(u, ks, use_kernel=True)
+        np.testing.assert_array_equal(np.asarray(a.mask), np.asarray(b.mask))
+        np.testing.assert_array_equal(np.asarray(a.values),
+                                      np.asarray(b.values))
+
+    def test_ef_compress_batch_kernel_route(self):
+        u, e, _, ks = _case(5, 3333, seed=10)
+        a, ra = C.ef_compress_batch(e, u, ks)
+        b, rb = C.ef_compress_batch(e, u, ks, use_kernel=True)
+        np.testing.assert_array_equal(np.asarray(a.mask), np.asarray(b.mask))
+        np.testing.assert_array_equal(np.asarray(a.values),
+                                      np.asarray(b.values))
+        np.testing.assert_array_equal(np.asarray(ra), np.asarray(rb))
+
+    def test_ef_kernel_route_rejects_custom_compressor(self):
+        """use_kernel=True implements global Top-K only — combining it with
+        a non-global compressor must fail loudly, not silently switch."""
+        u, e, _, ks = _case(3, 1024, seed=11)
+        with pytest.raises(ValueError, match="global Top-K"):
+            C.ef_compress_batch(e, u, ks,
+                                compress_batch=C.block_topk_compress_batch,
+                                use_kernel=True)
+
+    def test_opwa_traced_k_routes_agree(self):
+        u, _, w, ks = _case(8, 2048, seed=12)
+        a = opwa_aggregate_traced_k(u, ks, w, 5.0, 1, use_kernel=False)
+        b = opwa_aggregate_traced_k(u, ks, w, 5.0, 1, use_kernel=True)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestKernelProperty:
+    """Hypothesis sweep: random shapes, ks patterns (k=1, k=n, ties at the
+    threshold, all-zero rows, inactive masks) — agg and residuals bit-exact
+    for every strategy."""
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(1, 10), st.integers(2, 1500), st.integers(0, 10 ** 6),
+           st.sampled_from(["topk", "eftopk", "bcrs", "bcrs_opwa"]))
+    def test_bit_exact_everywhere(self, c, n, seed, strategy):
+        rng = np.random.default_rng(seed)
+        u = rng.normal(size=(c, n)).astype(np.float32)
+        u *= 10.0 ** rng.integers(-12, 12, size=(c, 1)).astype(np.float32)
+        if rng.random() < 0.3:
+            u[rng.integers(c)] = 0.0               # all-zero row
+        if rng.random() < 0.3 and n > 3:
+            r = int(rng.integers(c))
+            u[r, : n // 2] = u[r, 0]               # ties at the threshold
+        ks = rng.integers(1, n + 1, size=c).astype(np.int32)
+        ks[rng.integers(c)] = 1
+        ks[rng.integers(c)] = n
+        active = None
+        if rng.random() < 0.5:
+            active = rng.random(c) < 0.7
+            active[rng.integers(c)] = True         # >= 1 active row
+            u *= active[:, None]
+        w = (rng.random(c) + 0.05).astype(np.float32)
+        e = (rng.normal(size=(c, n)) * 0.3).astype(np.float32)
+        residuals = jnp.asarray(e) if strategy == "eftopk" else None
+        out = _agg_both(strategy, jnp.asarray(u), jnp.asarray(w),
+                        jnp.asarray(ks),
+                        residuals=residuals,
+                        active=jnp.asarray(active) if active is not None
+                        else None,
+                        gamma=float(rng.uniform(1.0, 8.0)),
+                        overlap_d=int(rng.integers(1, c + 1)))
+        np.testing.assert_array_equal(np.asarray(out[True][0]),
+                                      np.asarray(out[False][0]))
+        if strategy == "eftopk":
+            np.testing.assert_array_equal(np.asarray(out[True][1]),
+                                          np.asarray(out[False][1]))
+
+
+class TestKernelRoutedScanSim:
+    """The kernel-routed scan simulation still compiles exactly once and its
+    trajectory is bit-exact with the jnp-routed scan engine."""
+
+    def test_one_compile_and_parity(self):
+        from repro.core.aggregation import AggregationConfig
+        from repro.fed.simulation import FLSimConfig, run_fl
+        cfg = FLSimConfig(rounds=4, n_clients=6, n_train=1200, n_test=300,
+                          dim=32, hidden=32, n_classes=5, eval_every=2,
+                          seed=2)
+        accs = {}
+        for use_kernel in (False, True):
+            acfg = AggregationConfig(strategy="bcrs_opwa", cr=0.1,
+                                     use_kernel=use_kernel)
+            before = sum(engine.TRACE_COUNTS.values())
+            res = run_fl(cfg, acfg, engine="scan")
+            assert sum(engine.TRACE_COUNTS.values()) - before == 1
+            accs[use_kernel] = np.array([a for _, a in res.accuracies])
+        np.testing.assert_array_equal(accs[True], accs[False])

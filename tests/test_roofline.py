@@ -87,6 +87,37 @@ class TestCollectiveParsing:
         assert s.ops[0].cross_pod
 
 
+class TestKernelBytes:
+    """Merge-hot-path traffic accounting (repro.roofline.kernel_bytes)."""
+
+    def test_megakernel_traffic_model(self):
+        from repro.kernels.threshold_find import SWEEPS
+        from repro.roofline.kernel_bytes import megakernel_hbm_bytes
+        c, n = 8, 1 << 14          # already tile-aligned
+        b = megakernel_hbm_bytes(c, n, "topk")
+        mat = c * n * 4
+        # SWEEPS streamed reads + 1 merge read + the [n] aggregate write
+        assert b["total"] == pytest.approx(
+            (SWEEPS + 1) * mat + n * 4, rel=0.01)
+        ef = megakernel_hbm_bytes(c, n, "eftopk")
+        # EF doubles the streamed operands and adds the residual write
+        assert ef["total"] == pytest.approx(
+            2 * (SWEEPS + 1) * mat + n * 4 + mat, rel=0.01)
+
+    def test_merge_ratio_exceeds_3x(self):
+        from repro.fed.engine import ClientUpdateSpec
+        from repro.roofline.kernel_bytes import merge_traffic_ratio
+        for strategy in ("bcrs_opwa", "eftopk"):
+            spec = ClientUpdateSpec(strategy=strategy, gamma=5.0,
+                                    use_kernel=False)
+            r = merge_traffic_ratio(spec, 8, 1 << 13)
+            assert r["ratio"] >= 3.0, r
+            # the trip-count-aware baseline must see the 32-iteration
+            # bisection that XLA's cost_analysis hides
+            assert (r["unfused"]["passes"]
+                    > 3 * r["unfused"]["xla_cost_analysis_passes"])
+
+
 class TestModelFlops:
     def test_train_vs_decode(self):
         from repro.configs import SHAPES, get_config

@@ -117,6 +117,45 @@ class TestScanCompileCount:
         assert self._run(rounds=4, n_clients=12) == 1
 
 
+class TestScanTrajectoryMemory:
+    """The scanned program snapshots eval rounds into an O(E x n) carried
+    buffer — it must NOT emit the model every round (O(rounds x n))."""
+
+    def test_eval_buffer_is_o_evals_not_o_rounds(self):
+        from jax.flatten_util import ravel_pytree
+        from repro.fed.simulation import mlp_init, mlp_loss
+        params = mlp_init(jax.random.PRNGKey(0), dim=8, n_classes=3,
+                          hidden=8)
+        flat = ravel_pytree(params)[0].astype(jnp.float32)
+        n = flat.shape[0]
+        r, c, s, b, e = 6, 2, 1, 4, 2
+        sim_fn = engine.make_sim_scan(
+            mlp_loss, params, lr=0.1,
+            acfg=AggregationConfig(strategy="topk", cr=0.5))
+        key = jax.random.PRNGKey(1)
+        xs = {
+            "batches": {
+                "x": jax.random.normal(key, (r, c, s, b, 8)),
+                "y": jnp.zeros((r, c, s, b), jnp.int32)},
+            "step_mask": jnp.ones((r, c, s), bool),
+            "active": jnp.ones((r, c), bool),
+            "weights": jnp.full((r, c), 0.5, jnp.float32),
+            "ks": jnp.full((r, c), 5, jnp.int32),
+            "eval_write": jnp.asarray([False, False, True, False, False,
+                                       True]),
+            "eval_slot": jnp.asarray([0, 0, 0, 0, 0, 1], jnp.int32),
+        }
+        out = sim_fn(flat, jnp.zeros((0,), jnp.float32),
+                     jnp.zeros((e, n), jnp.float32), xs)
+        # O(E x n) snapshot buffer; the per-round ys carry no model copy
+        assert out["evals"].shape == (e, n)
+        assert "flat" not in out["ys"]
+        assert all(v.ndim <= 1 for v in out["ys"].values())
+        # the last snapshot is the final model (round 5 wrote slot 1)
+        np.testing.assert_array_equal(np.asarray(out["evals"][1]),
+                                      np.asarray(out["flat"]))
+
+
 class TestStepCap:
     def test_quantile_cap_tightens_static_shape(self):
         from repro.data import (build_client_datasets, dirichlet_partition,

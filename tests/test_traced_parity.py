@@ -1,0 +1,62 @@
+"""Statistical-equivalence harness for the fully-traced sampling engine
+(ROADMAP open item): ``run_fl_traced`` draws cohorts/failures/batches from
+its own in-jit PRNG stream, so it cannot be bit-compared with the host-rng
+engines — instead the MOMENTS of its accuracy trajectory over seeds must
+match the host-rng scan engine's.
+
+Both engines see the same seeded dataset/partition/links per seed (the
+``_setup_sim`` host-rng prefix is shared); only the per-round sampling
+streams differ. With >= 5 seeds the mean trajectories must agree within a
+few pooled standard errors, and the cross-seed spread must be the same
+order — a distribution-level parity check, deliberately robust to the
+per-seed noise that bit-parity tests cannot tolerate.
+"""
+import numpy as np
+import pytest
+
+from repro.core.aggregation import AggregationConfig
+from repro.fed.simulation import FLSimConfig, run_fl, run_fl_traced
+
+SEEDS = (0, 1, 2, 3, 4)
+CFG = dict(rounds=6, n_clients=8, participation=0.75, n_train=1600,
+           n_test=500, dim=64, hidden=64, n_classes=10, batch_size=32,
+           eval_every=2, noise=3.0)
+
+
+def _trajectories(acfg):
+    host, traced = [], []
+    for seed in SEEDS:
+        cfg = FLSimConfig(seed=seed, **CFG)
+        h = run_fl(cfg, acfg, engine="scan")
+        t = run_fl_traced(cfg, acfg)
+        assert [r for r, _ in h.accuracies] == [r for r, _ in t.accuracies]
+        host.append([a for _, a in h.accuracies])
+        traced.append([a for _, a in t.accuracies])
+    return np.asarray(host), np.asarray(traced)   # [S, E] each
+
+
+class TestTracedSamplingMoments:
+    def test_matched_moments_bcrs_opwa(self):
+        host, traced = _trajectories(
+            AggregationConfig(strategy="bcrs_opwa", cr=0.1))
+        # first moment: mean trajectory within 3 pooled standard errors
+        # (floored at 5 accuracy points — the two streams are genuinely
+        # different samples, not the same draw)
+        sem = np.sqrt((host.var(0, ddof=1) + traced.var(0, ddof=1))
+                      / len(SEEDS))
+        gap = np.abs(host.mean(0) - traced.mean(0))
+        assert (gap <= np.maximum(3.0 * sem, 0.05)).all(), (gap, sem)
+        # second moment: cross-seed spread of the final accuracy is the
+        # same order of magnitude (neither stream collapses or explodes)
+        s_h, s_t = host[:, -1].std(ddof=1), traced[:, -1].std(ddof=1)
+        assert s_t <= 5.0 * s_h + 0.02 and s_h <= 5.0 * s_t + 0.02
+        # both engines actually learn
+        assert host[:, -1].mean() > 0.3 and traced[:, -1].mean() > 0.3
+
+    def test_matched_final_accuracy_eftopk(self):
+        host, traced = _trajectories(
+            AggregationConfig(strategy="eftopk", cr=0.05))
+        gap = abs(host[:, -1].mean() - traced[:, -1].mean())
+        sem = np.sqrt((host[:, -1].var(ddof=1)
+                       + traced[:, -1].var(ddof=1)) / len(SEEDS))
+        assert gap <= max(3.0 * sem, 0.05), (gap, sem)
