@@ -5,6 +5,7 @@ plus the multi-round dimension (fused per-round dispatch vs the ONE-compile
     PYTHONPATH=src python -m benchmarks.bench_round [--fast] [--out PATH]
     PYTHONPATH=src python -m benchmarks.bench_round --sim-scan [--fast]
     PYTHONPATH=src python -m benchmarks.bench_round --kernels [--fast]
+    PYTHONPATH=src python -m benchmarks.bench_round --mesh-scan [--fast]
 
 For each (strategy, cohort size K) cell it runs the same seeded simulation
 through both engines, times steady-state rounds (first round excluded as
@@ -38,6 +39,15 @@ local SGD, dominates — the regime the scan lowering targets. Compile counts
 must stay O(1) for both engines (recorded in the JSON). A ``ragged``
 section records the step-cap (``FLSimConfig.step_cap_quantile``) win under
 extreme Dirichlet skew.
+
+``--mesh-scan`` benchmarks the REAL-MODEL mesh driver
+(``repro.launch.fl_train``) and writes ``BENCH_mesh_scan.json``: for each
+strategy it runs the same seeded reduced-arch training through the legacy
+one-jit-per-round dispatch loop (``--engine round``, steady-state median
+after warmup) and through the scanned multi-round program
+(``--engine scan``, AOT-compiled chunk — wall/rounds of the executable, the
+compile excluded exactly like the loop's warmup rounds), asserting the two
+trajectories' losses agree bitwise and the scan traced exactly once.
 
 ``--kernels`` benchmarks the traced-k Pallas megakernel pipeline
 (``threshold_find`` + ``fused_merge``) against the unfused jnp merge and
@@ -300,6 +310,77 @@ def run_sim_scan(fast: bool = False,
     return doc
 
 
+# ------------------------------------------------- real-model mesh driver
+MESH_STRATEGIES = ("bcrs_opwa", "eftopk")
+
+
+def bench_mesh_cell(strategy: str, rounds: int, warmup: int) -> dict:
+    """One strategy through both fl_train engines on the same seeded
+    reduced arch: legacy per-round-jit dispatch loop vs the scanned
+    multi-round program (single AOT-compiled chunk, so its wall_per_round
+    excludes the compile like the loop numbers exclude warmup)."""
+    from repro.fed import engine as engine_mod
+    from repro.launch.fl_train import FLTrainConfig, run as run_fl_train
+
+    base = dict(arch="stablelm-1.6b", reduced=True, rounds=rounds,
+                clients=4, local_steps=1, batch=2, seq=32,
+                strategy=strategy, cr=0.1, seed=7, verbose=False)
+    out = {"strategy": strategy, "rounds": rounds}
+
+    with CompileCounter() as cc:
+        res_r = run_fl_train(FLTrainConfig(**base, engine="round"))
+    steady = res_r["wall_per_round"][warmup:]
+    out["round"] = {"s_per_round": statistics.median(steady),
+                    "s_per_round_min": min(steady),
+                    "compiles": cc.n}
+
+    key = ("mesh_scan", strategy)
+    traces0 = engine_mod.TRACE_COUNTS[key]
+    with CompileCounter() as cc:
+        t0 = time.perf_counter()
+        res_s = run_fl_train(FLTrainConfig(**base, engine="scan"))
+        total = time.perf_counter() - t0
+    out["scan"] = {"s_per_round": res_s["wall_per_round"][0],
+                   "s_total": total, "compiles": cc.n,
+                   "mesh_scan_traces": engine_mod.TRACE_COUNTS[key] - traces0}
+    out["dispatch_overhead_ratio"] = (out["round"]["s_per_round"]
+                                      / out["scan"]["s_per_round"])
+    out["loss_max_abs_diff"] = float(np.abs(
+        np.array(res_r["losses"]) - np.array(res_s["losses"])).max())
+    return out
+
+
+def run_mesh_scan(fast: bool = False,
+                  out_path: str = "BENCH_mesh_scan.json") -> dict:
+    rounds = 8 if fast else 16
+    warmup = 2
+    results = []
+    for strategy in MESH_STRATEGIES:
+        cell = bench_mesh_cell(strategy, rounds, warmup)
+        results.append(cell)
+        print(f"{strategy:>10} R={rounds:<4} "
+              f"round-loop {cell['round']['s_per_round'] * 1e3:7.1f} "
+              f"ms/round ({cell['round']['compiles']:3d} compiles)  "
+              f"scan {cell['scan']['s_per_round'] * 1e3:7.1f} ms/round "
+              f"({cell['scan']['mesh_scan_traces']} traces)  "
+              f"overhead ratio {cell['dispatch_overhead_ratio']:.2f}x  "
+              f"|dloss| {cell['loss_max_abs_diff']:.1e}")
+    doc = {
+        "schema": "bench_mesh_scan/v1",
+        "env": {"platform": jax.devices()[0].platform,
+                "jax": jax.__version__,
+                "cpu_count": os.cpu_count()},
+        "config": {"rounds": rounds, "warmup": warmup,
+                   "arch": "stablelm-1.6b-reduced", "clients": 4,
+                   "fast": fast},
+        "results": results,
+    }
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"wrote {out_path}")
+    return doc
+
+
 # ------------------------------------------------- megakernel pipeline
 KERNEL_STRATEGIES = ("topk", "bcrs_opwa", "eftopk")
 
@@ -423,6 +504,10 @@ def main() -> int:
                     help="run the multi-round benchmark (fused per-round "
                          "dispatch vs the one-compile scan engine) and "
                          "write BENCH_sim_scan.json")
+    ap.add_argument("--mesh-scan", action="store_true",
+                    help="benchmark the real-model mesh driver (scanned "
+                         "multi-round program vs the legacy per-round-jit "
+                         "loop) and write BENCH_mesh_scan.json")
     ap.add_argument("--kernels", action="store_true",
                     help="benchmark the traced-k Pallas megakernel pipeline "
                          "vs the unfused merge (roofline HBM bytes + "
@@ -434,6 +519,21 @@ def main() -> int:
                          "bit-exact, >=3x HBM traffic reduction, and a "
                          "1-compile kernel-routed scan)")
     args = ap.parse_args()
+    if args.mesh_scan:
+        out = ("BENCH_mesh_scan.json" if args.out == "BENCH_round.json"
+               else args.out)
+        doc = run_mesh_scan(fast=args.fast, out_path=out)
+        if args.check:
+            bad = [c for c in doc["results"]
+                   if c["scan"]["mesh_scan_traces"] != 1
+                   or c["loss_max_abs_diff"] != 0.0]
+            if bad:
+                print(f"FAIL: mesh-scan check "
+                      f"{[c['strategy'] for c in bad]}")
+                return 1
+            print("OK: scanned mesh driver bit-exact with the per-round "
+                  "loop, 1 trace per run")
+        return 0
     if args.kernels:
         out = ("BENCH_kernels.json" if args.out == "BENCH_round.json"
                else args.out)

@@ -2,7 +2,7 @@
 FedAvg / TopK / EFTopK / BCRS / BCRS+OPWA.
 
 Offline stand-in for CIFAR/SVHN: synthetic Dirichlet-partitioned Gaussian
-classification (DESIGN.md §7). Validation targets the paper's RELATIVE
+classification (docs/DESIGN.md §7). Validation targets the paper's RELATIVE
 ordering: BCRS(+OPWA) >= TopK/EFTOPK at equal CR, with the gap widest at
 CR=0.01 and severe heterogeneity.
 """

@@ -1,4 +1,4 @@
-from repro.checkpoint.checkpointer import (latest_step, list_steps, restore,
-                                           save)
+from repro.checkpoint.checkpointer import (LayoutMismatch, latest_step,
+                                           list_steps, restore, save)
 
-__all__ = ["save", "restore", "latest_step", "list_steps"]
+__all__ = ["save", "restore", "latest_step", "list_steps", "LayoutMismatch"]

@@ -28,6 +28,14 @@ except Exception:  # pragma: no cover
 _CKPT_RE = re.compile(r"^step_(\d+)\.msgpack$")
 
 
+class LayoutMismatch(ValueError):
+    """A ``strict=False`` restore found NO leaf of the requested structure
+    in the checkpoint — the tree layouts are unrelated (e.g. a legacy
+    checkpoint from before a driver re-keyed its state). Distinct from the
+    plain ``ValueError`` a shape-drifted leaf raises, so callers can fall
+    back on layout changes without masking genuine config mismatches."""
+
+
 def _flatten(tree) -> Dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
@@ -93,10 +101,21 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
-def restore(ckpt_dir: str, like, step: Optional[int] = None
-            ) -> Tuple[Any, int, dict]:
+def restore(ckpt_dir: str, like, step: Optional[int] = None,
+            strict: bool = True) -> Tuple[Any, int, dict]:
     """Restore into the structure of ``like``. Returns (tree, step, extra).
-    Verifies the CRC32 digest; raises on corruption."""
+    Verifies the CRC32 digest; raises on corruption.
+
+    ``strict=False`` keeps a leaf's ``like`` value when the checkpoint has
+    no entry for it (instead of raising) — e.g. resuming an eftopk FL run
+    whose checkpoint predates EF-residual persistence starts with fresh
+    residuals rather than refusing to load the params. A checkpoint that
+    shares NO leaf with ``like`` still raises (:class:`LayoutMismatch`):
+    that is a tree layout mismatch, and silently returning ``like``
+    untouched would let a driver "resume" from fresh weights while
+    skipping the restored step count. A leaf that matches by key but not
+    by shape raises a plain ``ValueError`` (config drift, never a
+    fallback case)."""
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
@@ -111,10 +130,31 @@ def restore(ckpt_dir: str, like, step: Optional[int] = None
         raise IOError(f"checkpoint {path} failed CRC32 integrity check")
     leaves_p, treedef = jax.tree_util.tree_flatten_with_path(like)
     out = []
+    matched = 0
     for p, leaf in leaves_p:
         key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
+        if not strict and key not in payload["leaves"]:
+            out.append(jnp.asarray(leaf))
+            continue
+        matched += 1
         rec = payload["leaves"][key]
+        if not strict and tuple(rec["shape"]) != tuple(np.shape(leaf)):
+            # partial restore is for MISSING leaves, not reshaped ones: a
+            # shape drift (e.g. EF residuals saved for a different cohort
+            # size) must fail here with a named error, not later inside a
+            # compiled program
+            raise ValueError(
+                f"checkpoint leaf {key!r} has shape {tuple(rec['shape'])} "
+                f"but the requested structure expects "
+                f"{tuple(np.shape(leaf))} — config mismatch "
+                f"(e.g. cohort/pod count changed between save and resume)")
         a = np.frombuffer(rec["data"], dtype=_np_dtype(rec["dtype"]))
         out.append(jnp.asarray(a.reshape(rec["shape"])))
+    if leaves_p and matched == 0:
+        raise LayoutMismatch(
+            f"checkpoint {path} shares no leaves with the requested "
+            f"structure (checkpoint keys like "
+            f"{sorted(payload['leaves'])[:3]}…) — tree layout mismatch, "
+            f"not a partial restore")
     return (jax.tree_util.tree_unflatten(treedef, out), payload["step"],
             payload["extra"])

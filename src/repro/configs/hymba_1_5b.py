@@ -3,7 +3,7 @@
 32L d_model=1600 25H (GQA kv=5) d_ff=5504 vocab=32001, ssm_state=16.
 Sliding-window attention (1024) everywhere except first/middle/last layers
 (full attention), per the Hymba paper; every block carries a parallel SSM
-branch (chunked-SSD adaptation, see DESIGN.md §2).
+branch (chunked-SSD adaptation, see docs/DESIGN.md §2).
 """
 from repro.configs.base import ModelConfig, SSMConfig
 

@@ -3,7 +3,7 @@
 61L d_model=7168 64H (GQA kv=8, per the assignment table) expert_d_ff=2048
 vocab=163840, MoE 384 routed top-8 + 1 shared, first layer dense.
 NOTE: the public K2 uses MLA; the assignment table specifies GQA kv=8 and we
-follow the assignment exactly (see DESIGN.md §5).
+follow the assignment exactly (see docs/DESIGN.md §5).
 """
 from repro.configs.base import MoEConfig, ModelConfig
 

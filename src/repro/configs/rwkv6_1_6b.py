@@ -1,7 +1,7 @@
 """rwkv6-1.6b — Finch, data-dependent decay, attention-free [arXiv:2404.05892].
 
 24L d_model=2048 d_ff=7168 vocab=65536; head_size=64 (32 heads). Implemented
-with the chunked-GLA algorithm (log-space per-channel decay) — see DESIGN.md §2.
+with the chunked-GLA algorithm (log-space per-channel decay) — see docs/DESIGN.md §2.
 """
 from repro.configs.base import ModelConfig, RWKVConfig
 

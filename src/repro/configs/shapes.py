@@ -25,5 +25,5 @@ def applicability(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, Optional[
     """(runnable, skip_reason). Skips follow the assignment rules."""
     if shape.kind == "long_decode" and not cfg.sub_quadratic:
         return False, ("pure full-attention arch: 524k-token decode needs "
-                       "sub-quadratic attention (assignment rule; see DESIGN.md)")
+                       "sub-quadratic attention (assignment rule; see docs/DESIGN.md)")
     return True, None

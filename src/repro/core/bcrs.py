@@ -13,7 +13,7 @@ The paper leaves Norm() unspecified; we default to sum-normalization
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, List, Sequence
+from typing import Callable, List, Sequence, Tuple
 
 import numpy as np
 
@@ -72,6 +72,64 @@ def make_schedule(links: Sequence[ClientLink], data_fracs: np.ndarray,
     coef = client_coefficients(np.asarray(data_fracs, np.float64), crs, alpha)
     t_bench = max(comm_time(v_bytes, l, cr_star) for l in links)
     return BCRSSchedule(crs=crs, coefficients=coef, t_bench=t_bench)
+
+
+# ------------------------------------------------------- vectorized (R rounds)
+def schedule_crs_batch(bandwidths_bps: np.ndarray, latencies_s: np.ndarray,
+                       v_bytes: float, cr_star: float, cr_max: float = 1.0,
+                       active: np.ndarray | None = None
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """Alg. 2 vectorized over rounds: stacked [R, C] link arrays -> CRs.
+
+    Per-round drivers used to call ``make_schedule`` once per round inside
+    the training loop; the scanned mesh driver precomputes every round's
+    schedule as xs arrays, so the whole R-round CR plan is one numpy
+    broadcast here. ``active`` masks padded cohort slots out of the
+    benchmark-time max (their crs are still filled elementwise; callers gate
+    them with the same mask). Elementwise arithmetic and reduction order
+    match the scalar ``schedule_crs`` exactly, so a row of this equals
+    ``schedule_crs`` over that round's selected links bit-for-bit.
+
+    Returns (crs [R, C], t_bench [R]).
+    """
+    bw = np.asarray(bandwidths_bps, np.float64)
+    lat = np.asarray(latencies_s, np.float64)
+    v_bits = 8.0 * v_bytes
+    times = lat + 2.0 * v_bits * cr_star / bw
+    if active is not None:
+        times = np.where(active, times, -np.inf)
+    t_bench = times.max(axis=-1, keepdims=True)
+    crs = (t_bench - lat) * bw / (2.0 * v_bits)
+    return np.clip(crs, cr_star, cr_max), t_bench[..., 0]
+
+
+def make_schedule_batch(bandwidths_bps: np.ndarray, latencies_s: np.ndarray,
+                        data_fracs: np.ndarray, v_bytes: float,
+                        cr_star: float, alpha: float, cr_max: float = 1.0,
+                        active: np.ndarray | None = None,
+                        norm: Callable[[np.ndarray], np.ndarray] = norm_sum
+                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Vectorized ``make_schedule`` over R rounds of (possibly padded)
+    cohorts. All inputs [R, C]; ``active`` marks real cohort slots (padded
+    slots must carry harmless bw/lat placeholders — their crs/coefficients
+    come back as 0). Row r is bit-exact with
+    ``make_schedule(links_r, fracs_r, ...)`` over that round's active prefix
+    (the Eq. 6 normalization runs on exactly the active slice).
+
+    Returns (crs [R, C], coefficients [R, C], t_bench [R]).
+    """
+    fr = np.asarray(data_fracs, np.float64)
+    crs, t_bench = schedule_crs_batch(bandwidths_bps, latencies_s, v_bytes,
+                                      cr_star, cr_max, active=active)
+    coeffs = np.zeros_like(crs)
+    for r in range(crs.shape[0]):
+        sel = (slice(None) if active is None
+               else np.flatnonzero(active[r]))
+        coeffs[r, sel] = client_coefficients(fr[r, sel], crs[r, sel],
+                                             alpha, norm)
+    if active is not None:
+        crs = np.where(active, crs, 0.0)
+    return crs, coeffs, t_bench
 
 
 def pod_link_schedule(dcn_bandwidths_gbps: Sequence[float], v_bytes: float,

@@ -29,7 +29,25 @@ def flatten_tree(tree) -> Tuple[jax.Array, Callable]:
 
 
 def k_for_ratio(n: int, cr: float) -> int:
+    """Host-side retained count for compression ratio ``cr`` over ``n``
+    parameters: round(n·cr) clamped to [1, n] (CR=1 keeps everything
+    exactly). The ONE place the rounding rule lives — the traced twin below
+    must mirror any change, and every scheduler/engine routes through one of
+    the two (duplicating the clip/round inline is a silent-drift hazard)."""
     return max(1, min(n, int(round(n * cr))))
+
+
+def k_for_ratio_traced(n: int, crs: jax.Array) -> jax.Array:
+    """Traced twin of ``k_for_ratio`` for in-jit per-client/per-pod CRs:
+    crs (any shape, traced f32) -> i32 retained counts, same
+    clip(round(cr·n), 1, n) rule. ``n`` stays static (it is a leaf size).
+
+    The host variant rounds in f64, this one in f32 — for the CR grids the
+    schedulers emit the two agree exactly (asserted in tests); keep ratios
+    away from .5/n boundaries if bit-parity with host scheduling matters.
+    """
+    return jnp.clip(jnp.round(crs.astype(jnp.float32) * n).astype(jnp.int32),
+                    1, n)
 
 
 def resolve_use_kernel(flag) -> bool:
@@ -56,7 +74,7 @@ def topk_compress(u: jax.Array, cr: float) -> Compressed:
 
 def block_topk_compress(u: jax.Array, cr: float, block: int = 8192,
                         use_kernel="auto") -> Compressed:
-    """Per-block magnitude Top-K (TPU adaptation; see DESIGN.md §2).
+    """Per-block magnitude Top-K (TPU adaptation; see docs/DESIGN.md §2).
 
     Pads to a block multiple; each block keeps its own top ``cr`` fraction,
     preserving the global compression ratio exactly while keeping selection

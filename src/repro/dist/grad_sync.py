@@ -35,7 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.compression import resolve_use_kernel
+from repro.core.compression import k_for_ratio_traced, resolve_use_kernel
 from repro.fed.engine import compress_merge_leaf
 
 Metrics = Dict[str, jax.Array]
@@ -159,7 +159,7 @@ def make_compressed_train_step(model, opt, *, n_pods: int,
             if n < min_leaf_size:  # dense exchange, no EF
                 return (jnp.tensordot(coeffs, gf, axes=(0, 0))
                         .reshape(g.shape[1:]), e)
-            ks = jnp.clip(jnp.round(crs * n).astype(jnp.int32), 1, n)
+            ks = k_for_ratio_traced(n, crs)
             agg, new_e = compress_merge_leaf(
                 gf, coeffs, ks, gamma=gamma, overlap_d=overlap_d, opwa=True,
                 use_kernel=use_kernel, residuals=e.reshape(n_pods, n))

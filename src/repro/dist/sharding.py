@@ -8,7 +8,7 @@ Model code names axes *logically* (``"batch"``, ``"seq"``, ``"embed"``,
 test, every single-device run — ``constrain`` is an identity no-op, so the
 same model code runs unsharded without a mesh in scope.
 
-Layout policy (matching DESIGN.md / the dry-run evidence):
+Layout policy (matching docs/DESIGN.md / the dry-run evidence):
   - ``batch``   -> all batch mesh axes present (``("pod", "data")`` on the
                    multi-pod mesh, ``("data",)`` on one pod)
   - ``vocab`` / ``heads`` / ``experts`` -> the ``model`` axis (TP/EP)

@@ -273,8 +273,9 @@ def aggregate_updates(spec: ClientUpdateSpec, updates: jax.Array,
 # ------------------------------------------------------------- per-leaf path
 def compress_merge_leaf(updates: jax.Array, coeffs: jax.Array, ks: jax.Array,
                         *, gamma: float = 1.0, overlap_d: int = 1,
-                        opwa: bool = True, use_kernel: bool = False,
-                        residuals: Optional[jax.Array] = None
+                        opwa: bool = True, use_kernel="auto",
+                        residuals: Optional[jax.Array] = None,
+                        active: Optional[jax.Array] = None
                         ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """Compress + merge ONE leaf in its natural layout.
 
@@ -283,21 +284,58 @@ def compress_merge_leaf(updates: jax.Array, coeffs: jax.Array, ks: jax.Array,
     reshaped/gathered (see mesh_round). coeffs [C]; ks [C] i32 traced.
     ``residuals`` (matching [C, *shape], f32) switches on error feedback.
     ``opwa=False`` skips the overlap mask (plain weighted merge of the
-    compressed values).
+    compressed values). ``active`` (bool [C]) gates padded cohort slots out
+    of the merge, the overlap counts, and the residual update — the same
+    semantics as ``aggregate_updates``. ``use_kernel`` is the usual
+    tri-state (True / False / "auto" = TPU only, resolved here via
+    ``resolve_use_kernel`` so callers can pass "auto" straight through).
+
+    The kernel route runs the whole leaf through the traced-k megakernel
+    pipeline (``threshold_find`` + ``fused_merge``) on a [C, leaf_n] view —
+    bit-exact with the jnp path (per-client selection is over the whole leaf
+    either way, so the reshape changes nothing numerically). NOTE the view
+    merges the leaf's non-client axes, so on a TP-sharded leaf XLA inserts a
+    gather first; the jnp path stays fully sharding-preserving and remains
+    the default off-TPU.
 
     Returns (agg [*shape] f32, new_residuals | None).
     """
     w = coeffs.astype(jnp.float32)
+    if active is not None:
+        w = jnp.where(active, w, 0.0)
+    if comp.resolve_use_kernel(use_kernel):
+        from repro.kernels import ops as kops
+        c, shape = updates.shape[0], updates.shape[1:]
+        u2 = updates.astype(jnp.float32).reshape(c, -1)
+        r2 = (residuals.astype(jnp.float32).reshape(c, -1)
+              if residuals is not None else None)
+        agg2, new_res2 = kops.megakernel_aggregate(
+            u2, ks, w, residuals=r2, active=active, opwa=opwa,
+            gamma=float(gamma), d=int(overlap_d))
+        return (agg2.reshape(shape),
+                new_res2.reshape((c,) + shape) if residuals is not None
+                else None)
     x = updates.astype(jnp.float32)
     if residuals is not None:
         x = residuals + x
     c_obj = jax.vmap(comp.topk_compress_dynamic)(x, ks)
-    new_res = (x - c_obj.values) if residuals is not None else None
+    vals, mask = c_obj.values, c_obj.mask
+    new_res = (x - vals) if residuals is not None else None
+    if active is not None:
+        # padded rows are all-zero updates whose tie-at-zero Top-K mask is
+        # all-True — gate them out of the merge/counts; their residuals
+        # pass through unchanged
+        ax = active.reshape((-1,) + (1,) * (updates.ndim - 1))
+        vals = vals * ax
+        mask = mask & ax
+        if new_res is not None:
+            new_res = jnp.where(ax, new_res,
+                                residuals.astype(jnp.float32))
     if opwa:
-        agg = opwa_mod.opwa_aggregate(c_obj.values, c_obj.mask, w, gamma,
-                                      overlap_d, use_kernel=use_kernel)
+        agg = opwa_mod.opwa_aggregate(vals, mask, w, gamma,
+                                      overlap_d, use_kernel=False)
     else:
-        agg = jnp.tensordot(w, c_obj.values, axes=(0, 0))
+        agg = jnp.tensordot(w, vals, axes=(0, 0))
     return agg, new_res
 
 
@@ -438,3 +476,95 @@ def make_sim_scan(loss_fn: Callable, params_template, *, lr: float,
 
     fn = jax.jit(_sim, donate_argnums=(0, 1, 2))
     return SimScan(fn, spec, with_overlap)
+
+
+# ------------------------------------------------------- scanned mesh driver
+class MeshSimScan:
+    """Callable wrapper around the jitted multi-round mesh program (one
+    ``lax.scan`` chunk of the real-model FL trajectory)."""
+
+    def __init__(self, fn, strategy: str, ef: bool):
+        self._fn = fn
+        self.strategy = strategy
+        self.ef = ef
+
+    def __call__(self, params, residuals, xs):
+        return self._fn(params, residuals, xs)
+
+    def compile(self, params, residuals, xs):
+        """AOT lower+compile for the given chunk shapes. The jit cache keys
+        on shapes, so chunks of equal length reuse ONE executable; callers
+        (``launch.fl_train``) use this to separate the per-chunk-shape
+        compile from steady-state dispatch."""
+        return self._fn.lower(params, residuals, xs).compile()
+
+
+def init_mesh_residuals(params_template, cohort: int):
+    """Per-leaf EF residual pytree for the mesh engines: one f32
+    ``[cohort, *leaf]`` buffer per parameter leaf (the per-leaf twin of the
+    flat-space ``[C, n]`` residual matrix the simulation engines carry)."""
+    return jax.tree.map(
+        lambda l: jnp.zeros((cohort,) + tuple(l.shape), jnp.float32),
+        params_template)
+
+
+def make_mesh_sim_scan(loss_fn: Callable, params_template, *, lr: float,
+                       strategy: str = "bcrs_opwa", eta: float = 1.0,
+                       gamma: float = 5.0, overlap_d: int = 1,
+                       use_kernel="auto") -> MeshSimScan:
+    """Lower a multi-round REAL-MODEL FL trajectory into one ``lax.scan``.
+
+    The pytree-native twin of ``make_sim_scan``: where the simulation scan
+    carries a flat ``[n]`` vector, this carries the (possibly TP/FSDP-
+    sharded) params pytree itself plus a per-leaf EF residual pytree
+    (``[C, *leaf]`` per leaf, eftopk only) — every round body operates on
+    leaves in their natural layout through ``mesh_round.make_round_body`` /
+    ``compress_merge_leaf``, so sharded tensors stay sharded across the
+    whole compiled program and the carry buffers are donated in place.
+
+    Returned program signature (params and residuals donated)::
+
+        run(params,                      # pytree, any leaf dtypes/shardings
+            residuals,                   # per-leaf [C, *leaf] f32 pytree
+                                         # (zeros-[0] placeholder when the
+                                         # strategy carries no EF)
+            xs: {"batches"   pytree of [T, C, S, ...] stacked client batches,
+                 "step_mask" [T, C, S] bool,   # padded-step validity
+                 "active"    [T, C]    bool,   # padded cohort-slot validity
+                 "weights"   [T, C]    f32,    # 0 at inactive slots
+                 "crs"       [T, C]    f32})   # per-client BCRS ratios
+        -> {"params", "residuals", "ys": {"loss" [T]}}
+
+    ``T`` is a CHUNK of rounds, not necessarily the whole run: the driver
+    scans checkpoint_every-round chunks so every checkpoint boundary is a
+    host round-trip (params + residuals come back, get persisted, and are
+    fed — donated — into the next chunk). Chunks of equal length hit the
+    same jit cache entry, so a run compiles once per distinct chunk length
+    (tracked in TRACE_COUNTS[("mesh_scan", strategy)]).
+
+    Per-leaf retained counts are derived in-body from the per-client ``crs``
+    via ``core.compression.k_for_ratio_traced`` — the same rounding rule the
+    host scheduler uses, applied to each leaf's element count.
+    """
+    from repro.fed.mesh_round import make_round_body  # cycle-free at runtime
+    body_fn = make_round_body(loss_fn, lr_local=lr, eta=eta,
+                              strategy=strategy, gamma=gamma,
+                              overlap_d=overlap_d, use_kernel=use_kernel)
+    ef = strategy == "eftopk"
+
+    def scan_body(carry, x):
+        params, res = carry
+        new_params, new_res, loss = body_fn(
+            params, res if ef else None, x["batches"], x["step_mask"],
+            x["weights"], x["crs"], x["active"])
+        return (new_params, new_res if ef else res), {"loss": loss}
+
+    def _run(params, residuals, xs):
+        # host side effect: runs only at trace time
+        TRACE_COUNTS[("mesh_scan", strategy)] += 1
+        (params, residuals), ys = jax.lax.scan(
+            scan_body, (params, residuals), xs)
+        return {"params": params, "residuals": residuals, "ys": ys}
+
+    fn = jax.jit(_run, donate_argnums=(0, 1))
+    return MeshSimScan(fn, strategy, ef)

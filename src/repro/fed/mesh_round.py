@@ -3,62 +3,167 @@ model TP-sharded over ``model``, aggregation via sharded reductions (psum in
 the compiled HLO). This is the paper's system as a first-class distributed
 feature — the dry-run lowers this step for the paper-representative cells.
 
-Thin adapter over ``repro.fed.engine``: per-client selection routes through
-the shared traced-k integer-bit bisection (``core.compression.
-topk_compress_dynamic``) via ``engine.compress_merge_leaf`` — the private
-float-space bisection this module used to carry is gone (it needed ~40
-iterations, lost exactness near denormal thresholds, and kept ties
-inconsistently with the other engines; the integer-bit bisection is exact in
-<= 32 halvings including the CR=1 / k=n edge). Per-leaf selection (vs the
-host-loop simulator's whole-model flatten) keeps every tensor sharded; see
-DESIGN.md §7.
+Body adapter over ``repro.fed.engine``: ``make_round_body`` assembles ONE
+round of the real-model trajectory — masked vmapped local SGD, per-leaf
+traced-k compression with EF residuals, OPWA/weighted merge, server update —
+entirely from the shared substrate (``engine.make_masked_local_trainer`` +
+``engine.compress_merge_leaf``; every Top-K selection has
+``core.compression.topk_compress_dynamic`` semantics, megakernel-routed per
+leaf under ``use_kernel="auto"`` on TPU). The same body serves both
+dispatch granularities:
+
+  * ``make_mesh_round_step`` — one jitted program per round (the legacy
+    dispatch loop, kept as the scan's bit-parity reference);
+  * ``engine.make_mesh_sim_scan`` — the whole multi-round trajectory as one
+    ``lax.scan`` with the params/residual pytrees threaded through the
+    donated carry (the ``launch.fl_train`` default).
+
+Per-leaf selection (vs the host-loop simulator's whole-model flatten) keeps
+every tensor sharded; per-leaf retained counts come from the shared
+``k_for_ratio_traced`` rounding rule, so the host scheduler and the traced
+body can never drift. See docs/DESIGN.md §7.
 """
 from __future__ import annotations
 
-from typing import Callable
+import collections
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.fed.client import make_local_trainer
-from repro.fed.engine import compress_merge_leaf
+from repro.core import compression as comp
+from repro.fed.engine import (STRATEGIES, compress_merge_leaf,
+                              make_masked_local_trainer)
+
+#: retrace telemetry for the per-round mesh step: (strategy,) -> traces.
+#: The scanned driver's counter lives in engine.TRACE_COUNTS under
+#: ("mesh_scan", strategy).
+TRACE_COUNTS: collections.Counter = collections.Counter()
+
+
+def make_round_body(loss_fn: Callable, *, lr_local: float = 1e-2,
+                    eta: float = 1.0, strategy: str = "bcrs_opwa",
+                    gamma: float = 5.0, overlap_d: int = 1,
+                    use_kernel="auto") -> Callable:
+    """One real-model FL round as a pure traceable function.
+
+    Returns ``body(params, residuals, batches, step_mask, coeffs, crs,
+    active) -> (new_params, new_residuals, loss)``:
+
+      params      pytree (leaves keep their dtypes/shardings);
+      residuals   per-leaf EF pytree ([C, *leaf] f32) — required iff
+                  ``strategy == "eftopk"``, pass None otherwise;
+      batches     pytree with leading [C, S, ...] axes (C cohort slots,
+                  sharded over the batch mesh axes);
+      step_mask   bool [C, S] — padded local steps are exact no-ops;
+      coeffs      f32 [C] merge weights (data fracs or BCRS Eq. 6 p'_i),
+                  0 at padded slots;
+      crs         f32 [C] traced per-client compression ratios (per-leaf
+                  retained counts are ``k_for_ratio_traced(leaf_n, crs)``);
+      active      optional bool [C] — padded cohort slots contribute nothing
+                  to the merge, the OPWA overlap counts, the loss, or the
+                  residual update. None means every slot is real.
+
+    The reported loss is the active-masked mean of each client's last real
+    local step's pre-update loss (``make_masked_local_trainer`` semantics).
+    """
+    if strategy not in STRATEGIES:
+        raise ValueError(f"unknown strategy {strategy!r}")
+    ef = strategy == "eftopk"
+    compress = strategy != "fedavg"
+    opwa = strategy == "bcrs_opwa"
+    local_train = make_masked_local_trainer(loss_fn, lr_local)
+
+    def body(params, residuals, batches, step_mask, coeffs, crs, active):
+        if ef and residuals is None:
+            raise ValueError("eftopk needs per-leaf residuals")
+        deltas, losses = jax.vmap(local_train, in_axes=(None, 0, 0))(
+            params, batches, step_mask)
+        w = coeffs.astype(jnp.float32)
+        if active is not None:
+            w = jnp.where(active, w, 0.0)
+
+        def agg_leaf(p, dl, res):
+            """Sharding-preserving per-leaf compression: the bisection and
+            aggregation operate on the leaf's natural (TP-sharded) layout —
+            reshape(c, -1) would merge sharded dims and force XLA to gather
+            the whole leaf per device (§Perf iteration 1)."""
+            if not compress:
+                dl32 = dl.astype(jnp.float32)
+                if active is not None:
+                    dl32 = dl32 * active.reshape(
+                        (-1,) + (1,) * (dl32.ndim - 1))
+                agg, new_res = jnp.tensordot(w, dl32, axes=(0, 0)), res
+            else:
+                n = dl.size // dl.shape[0]
+                ks = comp.k_for_ratio_traced(n, crs)
+                agg, new_res = compress_merge_leaf(
+                    dl, w, ks, gamma=gamma, overlap_d=overlap_d, opwa=opwa,
+                    use_kernel=use_kernel, residuals=res, active=active)
+            return (p.astype(jnp.float32) - eta * agg).astype(p.dtype), new_res
+
+        leaves_p, treedef = jax.tree.flatten(params)
+        leaves_d = treedef.flatten_up_to(deltas)
+        leaves_r = (treedef.flatten_up_to(residuals) if ef
+                    else [None] * len(leaves_p))
+        out = [agg_leaf(p, d, r)
+               for p, d, r in zip(leaves_p, leaves_d, leaves_r)]
+        new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_res = (jax.tree.unflatten(treedef, [o[1] for o in out])
+                   if ef else residuals)
+
+        if active is None:
+            loss = jnp.mean(losses)
+        else:
+            n_act = jnp.maximum(jnp.sum(active.astype(jnp.int32)), 1)
+            loss = jnp.sum(jnp.where(active, losses, 0.0)) / n_act
+        return new_params, new_res, loss
+
+    return body
+
+
+def make_mesh_round_step(loss_fn: Callable, *, lr_local: float = 1e-2,
+                         eta: float = 1.0, strategy: str = "bcrs_opwa",
+                         gamma: float = 5.0, overlap_d: int = 1,
+                         use_kernel="auto", donate: bool = True) -> Callable:
+    """One jitted per-round program over ``make_round_body`` — the legacy
+    dispatch granularity (one compile + R dispatches), kept as the scanned
+    driver's bit-parity reference and the ``fl_train --engine round`` path.
+    Params and residual buffers are donated (``donate=False`` for callers
+    that reuse inputs, e.g. parity tests)."""
+    body = make_round_body(loss_fn, lr_local=lr_local, eta=eta,
+                           strategy=strategy, gamma=gamma,
+                           overlap_d=overlap_d, use_kernel=use_kernel)
+
+    def _step(params, residuals, batches, step_mask, coeffs, crs, active):
+        TRACE_COUNTS[(strategy,)] += 1   # host side effect: trace time only
+        return body(params, residuals, batches, step_mask, coeffs, crs,
+                    active)
+
+    return jax.jit(_step, donate_argnums=(0, 1) if donate else ())
 
 
 def make_fl_round_step(model, *, lr_local: float = 1e-2, eta: float = 1.0,
                        gamma: float = 5.0, overlap_d: int = 1,
-                       compress: bool = True) -> Callable:
-    """Returns jittable ``fl_round(params, client_batches, coeffs, crs)``.
+                       compress: bool = True, use_kernel="auto") -> Callable:
+    """Returns jittable ``fl_round(params, client_batches, coeffs, crs)`` —
+    the original single-round convenience surface (full cohort, full step
+    count, no EF), now a thin wrapper over ``make_round_body``.
 
     client_batches: pytree with leading [C, n_steps, ...] axes (C = cohort,
     sharded over the batch mesh axes). coeffs: [C] BCRS p'_i. crs: [C] f32
     per-client compression ratios (traced — scheduled per round on host).
     """
-    local_train = make_local_trainer(model.loss_fn, lr_local)
+    body = make_round_body(model.loss_fn, lr_local=lr_local, eta=eta,
+                           strategy="bcrs_opwa" if compress else "fedavg",
+                           gamma=gamma, overlap_d=overlap_d,
+                           use_kernel=use_kernel)
 
     def fl_round(params, client_batches, coeffs, crs):
-        deltas, losses = jax.vmap(local_train, in_axes=(None, 0))(
-            params, client_batches)
-
-        def agg_leaf(p, dl):
-            """Sharding-preserving per-leaf compression: the bisection and
-            aggregation operate on the leaf's natural (TP-sharded) layout —
-            reshape(c, -1) would merge sharded dims and force XLA to gather
-            the whole leaf per device (§Perf iteration 1)."""
-            if compress:
-                n = dl.size // dl.shape[0]
-                # same rounding as the host scheduler's k_for_ratio, clamped
-                # to [1, n] so CR=1 keeps the whole leaf exactly
-                ks = jnp.clip(jnp.round(crs.astype(jnp.float32) * n)
-                              .astype(jnp.int32), 1, n)
-                agg, _ = compress_merge_leaf(dl, coeffs, ks, gamma=gamma,
-                                             overlap_d=overlap_d, opwa=True,
-                                             use_kernel=False)
-            else:
-                agg = jnp.tensordot(coeffs.astype(jnp.float32),
-                                    dl.astype(jnp.float32), axes=(0, 0))
-            return (p.astype(jnp.float32) - eta * agg).astype(p.dtype)
-
-        new_params = jax.tree.map(agg_leaf, params, deltas)
-        return new_params, jnp.mean(losses)
+        c, s = jax.tree.leaves(client_batches)[0].shape[:2]
+        step_mask = jnp.ones((c, s), bool)
+        new_params, _, loss = body(params, None, client_batches, step_mask,
+                                   coeffs, crs, None)
+        return new_params, loss
 
     return fl_round

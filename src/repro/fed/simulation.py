@@ -2,7 +2,7 @@
 
 Reproduces the paper's protocol on synthetic Dirichlet-partitioned data with
 a small MLP classifier (offline stand-in for ResNet18/CIFAR — validation
-targets the paper's *relative* claims; see DESIGN.md §7):
+targets the paper's *relative* claims; see docs/DESIGN.md §7):
 
   for each round: sample C·N clients -> E local epochs SGD -> compress ->
   aggregate (fedavg | topk | eftopk | bcrs | bcrs_opwa) -> time accounting.
@@ -200,20 +200,32 @@ def planned_client_steps(sim: FLSimConfig) -> np.ndarray:
     return _steps_by_client(clients, sim)
 
 
-def _plan_cohort(rnd: int, rng, sim: FLSimConfig, fracs_all, links, v_bytes,
-                 acfg, failure: Optional[FailureInjector],
-                 straggler: Optional[StragglerPolicy]):
+def cohort_slots(n_clients: int, participation: float) -> int:
+    """Target cohort size C·N — the ONE place the rounding rule lives.
+    ``plan_cohort`` never emits a cohort larger than this, so it is also the
+    static slot count every padded [rounds, C] plan array and EF residual
+    buffer is sized with (fl_train, the scan engines)."""
+    return max(1, int(round(n_clients * participation)))
+
+
+def plan_cohort(rnd: int, rng, *, n_clients: int, participation: float,
+                fracs_all, links, v_bytes, acfg,
+                failure: Optional[FailureInjector] = None,
+                straggler: Optional[StragglerPolicy] = None):
     """One round's cohort: selection -> failure survivors -> straggler
-    arrivals -> renormalized weights. Shared by ALL engines — the host rng
-    stream is consumed in exactly this order everywhere, which is what makes
+    arrivals -> renormalized weights. Shared by ALL engines — the three
+    simulation engines AND the real-model mesh driver
+    (``launch.fl_train``) — so failure/straggler planning has exactly one
+    implementation; within the simulation harness the host rng stream is
+    consumed in exactly this order everywhere, which is what makes
     legacy/fused/scan trajectories comparable. Returns (selected, fr) or
     None when the whole cohort died (the round is skipped)."""
-    n_sel = max(1, int(round(sim.n_clients * sim.participation)))
+    n_sel = cohort_slots(n_clients, participation)
     n_draw = over_select(n_sel, straggler) if straggler is not None else n_sel
-    n_draw = min(n_draw, sim.n_clients)
-    selected = rng.choice(sim.n_clients, n_draw, replace=False)
+    n_draw = min(n_draw, n_clients)
+    selected = rng.choice(n_clients, n_draw, replace=False)
     if failure is not None:
-        alive = failure.survivors(rnd, sim.n_clients)
+        alive = failure.survivors(rnd, n_clients)
         selected = np.array([c for c in selected if alive[c]])
         if len(selected) == 0:
             return None
@@ -227,6 +239,17 @@ def _plan_cohort(rnd: int, rng, sim: FLSimConfig, fracs_all, links, v_bytes,
     fr = fracs_all[selected]
     fr = fr / fr.sum()
     return selected, fr
+
+
+def _plan_cohort(rnd: int, rng, sim: FLSimConfig, fracs_all, links, v_bytes,
+                 acfg, failure: Optional[FailureInjector],
+                 straggler: Optional[StragglerPolicy]):
+    """FLSimConfig-flavored wrapper over ``plan_cohort`` for the simulation
+    engines (same rng consumption, same return contract)."""
+    return plan_cohort(rnd, rng, n_clients=sim.n_clients,
+                       participation=sim.participation, fracs_all=fracs_all,
+                       links=links, v_bytes=v_bytes, acfg=acfg,
+                       failure=failure, straggler=straggler)
 
 
 def _stack_client_batches(clients, selected, sim: FLSimConfig,
@@ -399,7 +422,7 @@ def _run_scan(sim, acfg, rng, clients, parts, fracs_all, links, server,
     host (same rng stream as the fused loop), stack the schedules + batch
     sample indices as scan xs, run ONE jitted program, then evaluate the
     returned per-round model trajectory."""
-    n_sel = max(1, int(round(sim.n_clients * sim.participation)))
+    n_sel = cohort_slots(sim.n_clients, sim.participation)
     n_params, v_bytes = server.n_params, server.v_bytes
     bs = sim.batch_size
     ef = acfg.strategy == "eftopk"
@@ -550,7 +573,7 @@ def run_fl_traced(sim: FLSimConfig, acfg: agg_mod.AggregationConfig,
 
     steps_by_client = _steps_by_client(clients, sim)
     s_max = int(steps_by_client.max())
-    n_sel = max(1, int(round(n * sim.participation)))
+    n_sel = cohort_slots(n, sim.participation)
     n_draw = min(over_select(n_sel, straggler) if straggler else n_sel, n)
 
     # round-invariant per-client tables (links don't change, so the BCRS

@@ -1,12 +1,25 @@
 """Mesh-parallel federated training driver — the paper's system end-to-end:
 clients on the batch mesh axes, BCRS per-round CR schedule, OPWA
-aggregation, straggler deadline + elastic cohort, checkpoint/restart.
+aggregation, EF residual carrying, failure/straggler-aware cohorts,
+checkpoint/restart — lowered into ONE compiled multi-round program.
 
-The round program (``fed.mesh_round.make_fl_round_step``) is a thin adapter
-over the shared compression substrate (``fed.engine`` /
-``core.compression.topk_compress_dynamic``) — the same traced-k selection
-and OPWA merge the simulation engines run, applied per leaf so TP-sharded
-tensors stay sharded.
+The whole trajectory runs as ``engine.make_mesh_sim_scan``: the (possibly
+TP/FSDP-sharded) params pytree and the per-leaf EF residual pytree thread
+through a donated ``lax.scan`` carry, and everything the host decides per
+round — cohort composition (``fed.simulation.plan_cohort``, the SAME
+planner the simulation engines use), failure survivors, straggler arrivals,
+and the BCRS schedule (``core.bcrs.make_schedule_batch``, one vectorized
+call for all R rounds instead of one ``make_schedule`` per round) — is
+precomputed as stacked ``[R, C]`` xs arrays. The scan is chunked at
+checkpoint boundaries: one compile per distinct chunk length, one dispatch
+per chunk, params + EF residuals persisted at every boundary
+(``--engine round`` keeps the legacy one-jit-per-round dispatch loop as the
+bit-parity reference).
+
+All per-round randomness (synthetic client batches) is drawn from
+round-indexed rng streams, so a resumed run consumes bit-identical data to
+an uninterrupted one (tests/test_mesh_scan.py asserts restart bit-exactness
+including the EF residual state).
 
     PYTHONPATH=src python -m repro.launch.fl_train --arch stablelm-1.6b \
         --reduced --rounds 10 --clients 8
@@ -15,6 +28,8 @@ from __future__ import annotations
 
 import argparse
 import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,10 +39,285 @@ from repro import checkpoint as ckpt
 from repro.configs import ARCH_IDS, get_config
 from repro.core import bcrs as bcrs_mod
 from repro.core import cost_model
+from repro.core.aggregation import AggregationConfig
 from repro.data import synthetic_lm_tokens
-from repro.fed.mesh_round import make_fl_round_step
-from repro.ft import FailureInjector, renormalize_coefficients
+from repro.fed import engine as engine_mod
+from repro.fed.mesh_round import make_mesh_round_step
+from repro.fed.simulation import cohort_slots, plan_cohort
+from repro.ft import FailureInjector, StragglerPolicy
 from repro.models import Model
+
+STRATEGY_CHOICES = ("fedavg", "topk", "eftopk", "bcrs", "bcrs_opwa")
+
+#: scan-chunk cap when no checkpoint cadence is configured — keeps the
+#: device-resident per-chunk batch buffers O(MAX_CHUNK) instead of O(rounds)
+MAX_CHUNK_ROUNDS = 32
+#: default cadence when a checkpoint dir is set without --checkpoint-every:
+#: bounded crash-loss window (the pre-scan driver saved every round; every
+#: round would defeat the scan, 4 keeps the window small while amortizing)
+DEFAULT_CHECKPOINT_EVERY = 4
+
+
+@dataclass
+class FLTrainConfig:
+    """Everything the driver needs (the CLI below is a thin veneer)."""
+    arch: str = "stablelm-1.6b"
+    rounds: int = 10
+    clients: int = 8
+    participation: float = 1.0
+    local_steps: int = 2
+    batch: int = 4
+    seq: int = 128
+    strategy: str = "bcrs_opwa"
+    cr: float = 0.05
+    alpha: float = 1.0
+    gamma: float = 3.0
+    overlap_d: int = 1          # OPWA required degree of overlap D
+    lr: float = 5e-2
+    eta: float = 1.0
+    reduced: bool = False
+    fail_prob: float = 0.0
+    over_selection: float = 0.0  # rho > 0 enables straggler over-selection
+    checkpoint_dir: str = ""
+    checkpoint_every: int = 0    # rounds per scan chunk; 0 = auto-capped
+    engine: str = "scan"         # "scan" | "round"
+    use_kernel: object = "auto"
+    seed: int = 0
+    verbose: bool = True
+
+
+@dataclass
+class RoundPlan:
+    """Host-precomputed per-round xs arrays for the executed rounds.
+
+    Everything is padded to ``c_max`` cohort slots (active marks the real
+    prefix) so every round shares one static shape; ``rounds`` holds the
+    executed round numbers (rounds whose whole cohort died are absent — the
+    scan carry is untouched by construction, matching the per-round
+    engines' ``continue``)."""
+    rounds: List[int]
+    selected: np.ndarray     # [T, C] i32, -1 at padded slots
+    active: np.ndarray       # [T, C] bool
+    weights: np.ndarray      # [T, C] f32 (0 at padded slots)
+    crs: np.ndarray          # [T, C] f32 (comm/compression ratio per client)
+    step_mask: np.ndarray    # [T, C, S] bool
+
+
+def _build_plan(cfg: FLTrainConfig, rng, fracs_all, links, v_bytes,
+                acfg: AggregationConfig,
+                failure: Optional[FailureInjector],
+                straggler: Optional[StragglerPolicy]) -> RoundPlan:
+    """Plan every round before training starts: cohorts through the shared
+    ``plan_cohort`` (one rng stream, consumed in round order — restart-
+    invariant because the whole plan is rebuilt identically at startup),
+    then the BCRS schedule for ALL rounds in one vectorized
+    ``make_schedule_batch`` call (the per-round ``make_schedule`` this
+    replaces was loop-invariant whenever the cohort was)."""
+    c_max = cohort_slots(cfg.clients, cfg.participation)
+    plans = []
+    for rnd in range(cfg.rounds):
+        p = plan_cohort(rnd, rng, n_clients=cfg.clients,
+                        participation=cfg.participation, fracs_all=fracs_all,
+                        links=links, v_bytes=v_bytes, acfg=acfg,
+                        failure=failure, straggler=straggler)
+        if p is not None:
+            plans.append((rnd, *p))
+    t = len(plans)
+    selected = np.full((t, c_max), -1, np.int32)
+    active = np.zeros((t, c_max), bool)
+    fr_pad = np.zeros((t, c_max), np.float64)
+    # harmless placeholders at padded slots (they never reach the schedule
+    # max or the merge: active gates them everywhere)
+    bw = np.ones((t, c_max), np.float64)
+    lat = np.zeros((t, c_max), np.float64)
+    for i, (rnd, sel, fr) in enumerate(plans):
+        c_r = len(sel)
+        selected[i, :c_r] = sel
+        active[i, :c_r] = True
+        fr_pad[i, :c_r] = fr
+        bw[i, :c_r] = [links[c].bandwidth_bps for c in sel]
+        lat[i, :c_r] = [links[c].latency_s for c in sel]
+
+    if cfg.strategy in ("bcrs", "bcrs_opwa"):
+        crs, coeffs, _ = bcrs_mod.make_schedule_batch(
+            bw, lat, fr_pad, v_bytes, cfg.cr, cfg.alpha, active=active)
+        weights = coeffs.astype(np.float32)
+        crs = crs.astype(np.float32)
+    else:
+        weights = fr_pad.astype(np.float32)
+        cr_eff = 1.0 if cfg.strategy == "fedavg" else cfg.cr
+        crs = np.where(active, np.float32(cr_eff), np.float32(0.0))
+
+    step_mask = np.zeros((t, c_max, cfg.local_steps), bool)
+    step_mask[active] = True
+    return RoundPlan(rounds=[p[0] for p in plans], selected=selected,
+                     active=active, weights=weights, crs=crs,
+                     step_mask=step_mask)
+
+
+def _round_batches(cfg: FLTrainConfig, vocab: int, rnd: int,
+                   c_max: int) -> Dict[str, np.ndarray]:
+    """Synthetic LM batches for one round, drawn from a round-indexed rng
+    stream — independent of resume point and of which earlier rounds were
+    skipped, so checkpoint/restart consumes bit-identical data."""
+    r = np.random.default_rng((cfg.seed, 104_729, rnd))
+    toks = synthetic_lm_tokens(
+        c_max * cfg.local_steps * cfg.batch, cfg.seq + 1, vocab, r).reshape(
+            c_max, cfg.local_steps, cfg.batch, cfg.seq + 1)
+    return {"tokens": toks[..., :-1], "labels": toks[..., 1:]}
+
+
+def _stack_batches(cfg: FLTrainConfig, vocab: int, rounds: List[int],
+                   c_max: int) -> Dict[str, jax.Array]:
+    per = [_round_batches(cfg, vocab, rnd, c_max) for rnd in rounds]
+    return {k: jnp.asarray(np.stack([b[k] for b in per])) for k in per[0]}
+
+
+def run(cfg: FLTrainConfig) -> dict:
+    """Train per ``cfg``; returns {params, residuals, losses,
+    executed_rounds, wall_per_round, chunk_rounds, times, resumed_from}."""
+    model_cfg = get_config(cfg.arch)
+    if cfg.reduced:
+        model_cfg = model_cfg.reduced()
+    model = Model(model_cfg)
+    rng = np.random.default_rng(cfg.seed)
+    params = model.init(jax.random.PRNGKey(cfg.seed))
+    n_flat = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    v_bytes = 4.0 * n_flat
+    c_max = cohort_slots(cfg.clients, cfg.participation)
+    ef = cfg.strategy == "eftopk"
+
+    acfg = AggregationConfig(strategy=cfg.strategy, cr=cfg.cr,
+                             alpha=cfg.alpha, gamma=cfg.gamma,
+                             overlap_d=cfg.overlap_d,
+                             use_kernel=cfg.use_kernel)
+    links = cost_model.sample_links(cfg.clients, rng)
+    fracs_all = np.full(cfg.clients, 1.0 / cfg.clients)
+    failure = (FailureInjector(p_fail=cfg.fail_prob, seed=cfg.seed)
+               if cfg.fail_prob > 0 else None)
+    straggler = (StragglerPolicy(over_selection=cfg.over_selection)
+                 if cfg.over_selection > 0 else None)
+    plan = _build_plan(cfg, rng, fracs_all, links, v_bytes, acfg,
+                       failure, straggler)
+    times = cost_model.TimeAccumulator()
+
+    residuals = (engine_mod.init_mesh_residuals(params, c_max) if ef
+                 else jnp.zeros((0,), jnp.float32))
+    start, resumed_from = 0, None
+    if cfg.checkpoint_dir and ckpt.latest_step(cfg.checkpoint_dir) is not None:
+        like = {"params": params, "residuals": residuals}
+        try:
+            # strict=False: a residual-free checkpoint (e.g. strategy
+            # switched to eftopk) resumes with fresh residuals
+            tree, start, _extra = ckpt.restore(cfg.checkpoint_dir, like,
+                                               strict=False)
+            params, residuals = tree["params"], tree["residuals"]
+        except ckpt.LayoutMismatch:
+            # legacy layout: the pre-scan driver checkpointed the bare
+            # params pytree at the top level (a shape-drifted leaf raises
+            # plain ValueError above and must NOT reach this fallback)
+            params, start, _extra = ckpt.restore(cfg.checkpoint_dir, params)
+        resumed_from = start
+        if cfg.verbose:
+            print(f"[fl] resumed from round {start}")
+
+    todo = [i for i, rnd in enumerate(plan.rounds) if rnd >= start]
+    # checkpoint_every=0 still bounds the chunk: each chunk's batches are
+    # materialized device-resident as xs, so an uncapped chunk would make a
+    # long run O(rounds) in batch memory for zero benefit past the point
+    # where dispatch overhead is amortized; with a checkpoint dir the
+    # default cadence also bounds the crash-loss window
+    if cfg.checkpoint_every > 0:
+        chunk = cfg.checkpoint_every
+    elif cfg.checkpoint_dir:
+        chunk = DEFAULT_CHECKPOINT_EVERY
+    else:
+        chunk = min(max(len(todo), 1), MAX_CHUNK_ROUNDS)
+
+    losses: List[float] = []
+    wall_per_round: List[float] = []
+    chunk_rounds: List[int] = []
+    kw = dict(strategy=cfg.strategy, eta=cfg.eta, gamma=cfg.gamma,
+              overlap_d=cfg.overlap_d, use_kernel=cfg.use_kernel)
+
+    def save(next_round: int) -> None:
+        if cfg.checkpoint_dir:
+            tree = {"params": params, "residuals": residuals}
+            ckpt.save(cfg.checkpoint_dir, next_round, tree,
+                      extra={"arch": cfg.arch, "strategy": cfg.strategy})
+
+    def account_and_log(i: int, loss: float, wall: float) -> None:
+        rnd = plan.rounds[i]
+        sel = plan.selected[i][plan.active[i]]
+        links_sel = [links[c] for c in sel]
+        times.add(cost_model.round_times(links_sel, v_bytes,
+                                         plan.crs[i][plan.active[i]]))
+        losses.append(loss)
+        wall_per_round.append(wall)
+        if cfg.verbose:
+            crs_act = plan.crs[i][plan.active[i]]
+            print(f"[fl] round {rnd} loss {loss:.4f} "
+                  f"cohort {len(sel)}/{cfg.clients} "
+                  f"round_time {times.per_round[-1].actual:.2f}s "
+                  f"CRs [{crs_act.min():.3f},{crs_act.max():.3f}]")
+
+    if cfg.engine == "scan":
+        sim = engine_mod.make_mesh_sim_scan(model.loss_fn, params,
+                                            lr=cfg.lr, **kw)
+        compiled: Dict[int, object] = {}
+        pos = 0
+        while pos < len(todo):
+            idx = todo[pos:pos + chunk]
+            xs = {"batches": _stack_batches(cfg, model_cfg.vocab_size,
+                                            [plan.rounds[i] for i in idx],
+                                            c_max),
+                  "step_mask": jnp.asarray(plan.step_mask[idx]),
+                  "active": jnp.asarray(plan.active[idx]),
+                  "weights": jnp.asarray(plan.weights[idx]),
+                  "crs": jnp.asarray(plan.crs[idx])}
+            # AOT-compile once per distinct chunk length; the jit cache
+            # makes equal-length chunks ONE executable, so wall_per_round
+            # reports steady-state dispatch cost
+            if len(idx) not in compiled:
+                compiled[len(idx)] = sim.compile(params, residuals, xs)
+            t0 = time.perf_counter()
+            out = compiled[len(idx)](params, residuals, xs)
+            jax.block_until_ready(out["params"])
+            wall = (time.perf_counter() - t0) / len(idx)
+            params, residuals = out["params"], out["residuals"]
+            for j, i in enumerate(idx):
+                account_and_log(i, float(out["ys"]["loss"][j]), wall)
+            chunk_rounds.append(len(idx))
+            save(plan.rounds[idx[-1]] + 1)
+            pos += len(idx)
+    elif cfg.engine == "round":
+        step = make_mesh_round_step(model.loss_fn, lr_local=cfg.lr, **kw)
+        for pos, i in enumerate(todo):
+            batches = {k: jnp.asarray(v) for k, v in _round_batches(
+                cfg, model_cfg.vocab_size, plan.rounds[i], c_max).items()}
+            t0 = time.perf_counter()
+            params, residuals, loss = step(
+                params, residuals if ef else None, batches,
+                jnp.asarray(plan.step_mask[i]), jnp.asarray(plan.weights[i]),
+                jnp.asarray(plan.crs[i]), jnp.asarray(plan.active[i]))
+            jax.block_until_ready(params)
+            wall = time.perf_counter() - t0
+            if not ef:
+                residuals = jnp.zeros((0,), jnp.float32)
+            account_and_log(i, float(loss), wall)
+            chunk_rounds.append(1)
+            if (pos + 1) % chunk == 0 or pos == len(todo) - 1:
+                save(plan.rounds[i] + 1)
+    else:
+        raise ValueError(f"unknown engine {cfg.engine!r}")
+
+    if cfg.verbose:
+        print(f"[fl] done; accumulated comm time {times.actual:.1f}s "
+              f"(straggler-free min would be {times.min:.1f}s)")
+    return {"params": params, "residuals": residuals, "losses": losses,
+            "executed_rounds": [plan.rounds[i] for i in todo],
+            "wall_per_round": wall_per_round, "chunk_rounds": chunk_rounds,
+            "times": times, "resumed_from": resumed_from}
 
 
 def main():
@@ -35,9 +325,12 @@ def main():
     ap.add_argument("--arch", choices=ARCH_IDS, default="stablelm-1.6b")
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--participation", type=float, default=1.0)
     ap.add_argument("--local-steps", type=int, default=2)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--strategy", choices=STRATEGY_CHOICES,
+                    default="bcrs_opwa")
     ap.add_argument("--cr", type=float, default=0.05)
     ap.add_argument("--alpha", type=float, default=1.0)
     ap.add_argument("--gamma", type=float, default=3.0)
@@ -46,57 +339,25 @@ def main():
     ap.add_argument("--lr", type=float, default=5e-2)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--fail-prob", type=float, default=0.0)
+    ap.add_argument("--over-selection", type=float, default=0.0,
+                    help="straggler over-selection rho (0 disables)")
     ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="rounds per scan chunk / checkpoint cadence "
+                         "(0 = auto chunking, checkpoint at chunk ends)")
+    ap.add_argument("--engine", choices=("scan", "round"), default="scan")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    model = Model(cfg)
-    rng = np.random.default_rng(args.seed)
-    params = model.init(jax.random.PRNGKey(args.seed))
-    n_flat = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
-    v_bytes = 4.0 * n_flat
-
-    round_fn = jax.jit(make_fl_round_step(
-        model, lr_local=args.lr, eta=1.0, gamma=args.gamma,
-        overlap_d=args.overlap_d))
-
-    links = cost_model.sample_links(args.clients, rng)
-    fracs = np.full(args.clients, 1.0 / args.clients)
-    injector = FailureInjector(p_fail=args.fail_prob, seed=args.seed)
-    times = cost_model.TimeAccumulator()
-
-    start = 0
-    if args.checkpoint_dir and ckpt.latest_step(args.checkpoint_dir) is not None:
-        params, start, _ = ckpt.restore(args.checkpoint_dir, params)
-        print(f"[fl] resumed from round {start}")
-
-    for rnd in range(start, args.rounds):
-        sched = bcrs_mod.make_schedule(links, fracs, v_bytes, args.cr,
-                                       args.alpha)
-        alive = injector.survivors(rnd, args.clients)
-        coeffs = renormalize_coefficients(sched.coefficients, alive)
-        toks = synthetic_lm_tokens(
-            args.clients * args.local_steps * args.batch, args.seq + 1,
-            cfg.vocab_size, rng).reshape(
-                args.clients, args.local_steps, args.batch, args.seq + 1)
-        batches = {"tokens": jnp.asarray(toks[..., :-1]),
-                   "labels": jnp.asarray(toks[..., 1:])}
-        params, loss = round_fn(params, batches,
-                                jnp.asarray(coeffs, jnp.float32),
-                                jnp.asarray(sched.crs, jnp.float32))
-        times.add(cost_model.round_times(links, v_bytes, sched.crs))
-        print(f"[fl] round {rnd} loss {float(loss):.4f} "
-              f"alive {int(alive.sum())}/{args.clients} "
-              f"round_time {times.per_round[-1].actual:.2f}s "
-              f"CRs [{sched.crs.min():.3f},{sched.crs.max():.3f}]")
-        if args.checkpoint_dir:
-            ckpt.save(args.checkpoint_dir, rnd + 1, params,
-                      extra={"arch": args.arch})
-    print(f"[fl] done; accumulated comm time {times.actual:.1f}s "
-          f"(straggler-free min would be {times.min:.1f}s)")
+    run(FLTrainConfig(
+        arch=args.arch, rounds=args.rounds, clients=args.clients,
+        participation=args.participation, local_steps=args.local_steps,
+        batch=args.batch, seq=args.seq, strategy=args.strategy, cr=args.cr,
+        alpha=args.alpha, gamma=args.gamma, overlap_d=args.overlap_d,
+        lr=args.lr, reduced=args.reduced, fail_prob=args.fail_prob,
+        over_selection=args.over_selection,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every, engine=args.engine,
+        seed=args.seed))
 
 
 if __name__ == "__main__":

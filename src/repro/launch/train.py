@@ -4,7 +4,7 @@ same entry point via jax.distributed — see README).
 Fault tolerance: resumes from the latest checkpoint automatically; atomic
 writes make crash-mid-save safe; ``--compressed-pods`` turns on the
 hierarchical BCRS/OPWA gradient sync over the pod axis (the paper's
-technique applied to multi-pod DP — DESIGN.md §2).
+technique applied to multi-pod DP — docs/DESIGN.md §2).
 
     PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b \
         --steps 100 --batch 8 --seq 256 --reduced --checkpoint-dir ckpt/

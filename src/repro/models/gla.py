@@ -1,5 +1,5 @@
 """Chunked gated linear attention — the TPU-native form of RWKV6's WKV
-recurrence and Mamba-2/SSD's selective scan (see DESIGN.md §2).
+recurrence and Mamba-2/SSD's selective scan (see docs/DESIGN.md §2).
 
 Recurrence (per batch b, head h; Dk = key dim, Dv = value dim):
 

@@ -1,5 +1,5 @@
 """SSM branch for Hymba blocks — Mamba-2/SSD-style selective state space,
-chunked for the MXU (DESIGN.md §2: GPU sequential selective-scan adapted to a
+chunked for the MXU (docs/DESIGN.md §2: GPU sequential selective-scan adapted to a
 chunked matmul recurrence; state size stays at the assigned 16).
 """
 from __future__ import annotations
