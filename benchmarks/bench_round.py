@@ -71,6 +71,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import strategies as strat_mod
 from repro.core.aggregation import AggregationConfig
 from repro.fed import round_step
 from repro.fed.simulation import FLSimConfig, run_fl
@@ -407,7 +408,7 @@ def bench_kernels_cell(strategy: str, clients: int, n: int,
     # BCRS-style spread of per-client retained counts
     crs = np.geomspace(0.01, 0.5, clients)
     ks = jnp.asarray([k_for_ratio(n, float(c)) for c in crs], jnp.int32)
-    ef = strategy == "eftopk"
+    ef = strat_mod.get(strategy).needs_residuals
 
     out = {"strategy": strategy, "clients": clients, "n": n}
     aggs = {}
@@ -500,6 +501,10 @@ def main() -> int:
                     help="K in {8,16}, fewer rounds (CI-speed)")
     ap.add_argument("--rounds", type=int, default=0)
     ap.add_argument("--out", default="BENCH_round.json")
+    ap.add_argument("--strategy", default=None,
+                    help="bench a single registered strategy instead of the "
+                         "mode's default list (unknown names error, listing "
+                         "what is registered)")
     ap.add_argument("--sim-scan", action="store_true",
                     help="run the multi-round benchmark (fused per-round "
                          "dispatch vs the one-compile scan engine) and "
@@ -519,6 +524,15 @@ def main() -> int:
                          "bit-exact, >=3x HBM traffic reduction, and a "
                          "1-compile kernel-routed scan)")
     args = ap.parse_args()
+    if args.strategy is not None:
+        global STRATEGIES, SCAN_STRATEGIES, MESH_STRATEGIES, KERNEL_STRATEGIES
+        try:
+            strat_mod.get(args.strategy)
+        except ValueError as e:
+            ap.error(str(e))
+        only = (args.strategy,)
+        STRATEGIES = SCAN_STRATEGIES = MESH_STRATEGIES = KERNEL_STRATEGIES = \
+            only
     if args.mesh_scan:
         out = ("BENCH_mesh_scan.json" if args.out == "BENCH_round.json"
                else args.out)

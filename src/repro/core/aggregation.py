@@ -4,11 +4,11 @@ Strategies consume per-client *flat* updates Δw_i = w_t − w_i (K × n), apply
 the chosen compression client-side, and produce the aggregated update the
 server subtracts:  w_{t+1} = w_t − η · agg.
 
-  fedavg      uniform data-weighted average, no compression
-  topk        data-weighted average of Top-K-compressed updates
-  eftopk      topk + client-side error feedback residuals
-  bcrs        per-client CRs from bandwidth schedule + Eq. 6 coefficients
-  bcrs_opwa   bcrs + overlap-aware parameter mask (Alg. 3)
+Strategies are registered capability records (``repro.core.strategies``) —
+this module dispatches on ``compresses`` / ``needs_residuals`` /
+``weighting`` / ``overlap_weighted`` / ``value_codec`` and never matches
+strategy names, so registry-only strategies (e.g. ``qtopk``) run through the
+eager path unchanged. ``strategies.names()`` lists what is available.
 
 The host-side schedule (``round_schedule``) is shared by the eager path here
 and the fused jitted round (repro.fed.round_step): per-round CRs/coefficients
@@ -27,11 +27,12 @@ import numpy as np
 from repro.core import bcrs as bcrs_mod
 from repro.core import compression as comp
 from repro.core import opwa as opwa_mod
+from repro.core import strategies as strat_mod
 
 
 @dataclass
 class AggregationConfig:
-    strategy: str = "fedavg"       # fedavg | topk | eftopk | bcrs | bcrs_opwa
+    strategy: str = "fedavg"       # any name in core.strategies.names()
     cr: float = 0.1                # default/uniform compression ratio CR*
     alpha: float = 1.0             # server lr inside coefficients (Eq. 6)
     gamma: float = 5.0             # OPWA enlarge rate
@@ -40,6 +41,14 @@ class AggregationConfig:
     block_size: int = 8192
     use_kernel: object = "auto"    # Pallas kernels: True | False | "auto"
 
+    def __post_init__(self):
+        strat_mod.get(self.strategy)   # config-time error, names listed
+
+    @property
+    def strat(self) -> strat_mod.Strategy:
+        """The registered capability record for ``strategy``."""
+        return strat_mod.get(self.strategy)
+
 
 # ------------------------------------------------------------- host schedule
 def round_schedule(acfg: AggregationConfig, k: int, data_fracs: np.ndarray,
@@ -47,27 +56,27 @@ def round_schedule(acfg: AggregationConfig, k: int, data_fracs: np.ndarray,
                    ) -> Tuple[np.ndarray, np.ndarray, dict]:
     """Host-side per-round schedule: (crs [k], agg weights [k], info).
 
-    fedavg/topk/eftopk weight by data fractions; bcrs* weight by the Eq. 6
-    coefficients from the bandwidth schedule. ``info`` carries the same keys
-    the eager ``aggregate`` used to emit (no "crs" for fedavg, so the
-    server's time accounting falls back to CR=1 exactly as before).
+    Dispatches on registry capabilities: non-compressing strategies get
+    all-ones CRs with data-fraction weights (and no "crs" info key, so the
+    server's time accounting takes the dense route exactly as before);
+    "data"-weighted compressors get the uniform CR*; "bcrs"-weighted ones
+    get the bandwidth schedule's CRs and Eq. 6 coefficients.
     """
+    strat = acfg.strat
     info: dict = {"strategy": acfg.strategy}
     f = np.asarray(data_fracs, np.float64)
-    if acfg.strategy == "fedavg":
+    if not strat.compresses:
         return np.ones((k,)), f, info
-    if acfg.strategy in ("topk", "eftopk"):
+    if strat.weighting == "data":
         crs = np.full((k,), acfg.cr)
         info["crs"] = crs
         return crs, f, info
-    if acfg.strategy in ("bcrs", "bcrs_opwa"):
-        assert links is not None and v_bytes > 0, "BCRS needs link models"
-        sched = bcrs_mod.make_schedule(links, f, v_bytes, acfg.cr, acfg.alpha)
-        info["crs"] = sched.crs
-        info["coefficients"] = sched.coefficients
-        info["t_bench"] = sched.t_bench
-        return sched.crs, sched.coefficients, info
-    raise ValueError(f"unknown strategy {acfg.strategy!r}")
+    assert links is not None and v_bytes > 0, "BCRS needs link models"
+    sched = bcrs_mod.make_schedule(links, f, v_bytes, acfg.cr, acfg.alpha)
+    info["crs"] = sched.crs
+    info["coefficients"] = sched.coefficients
+    info["t_bench"] = sched.t_bench
+    return sched.crs, sched.coefficients, info
 
 
 def ks_for_schedule(n: int, crs: np.ndarray, acfg: AggregationConfig
@@ -96,15 +105,32 @@ def overlap_ks(acfg: AggregationConfig, info: dict, k: int, n: int
 # ------------------------------------------------------- client compression
 def _compress_fn(acfg: AggregationConfig):
     if acfg.block_topk:
-        return lambda u, cr: comp.block_topk_compress(
+        base = lambda u, cr: comp.block_topk_compress(
             u, cr, block=acfg.block_size, use_kernel=acfg.use_kernel)
-    return comp.topk_compress
+    else:
+        base = comp.topk_compress
+    codec = acfg.strat.value_codec
+    if codec is None:
+        return base
+
+    def fn(u, cr):
+        c = base(u, cr)
+        # the codec contract is batched ([C, ...] leading client axis);
+        # single-client callers add/strip it here
+        return comp.Compressed(codec(c.values[None], c.mask[None])[0],
+                               c.mask)
+
+    return fn
 
 
-@functools.partial(jax.jit, static_argnames=("block",))
-def _compress_batch(updates, ks, residuals, block):
+@functools.partial(jax.jit, static_argnames=("block", "codec"))
+def _compress_batch(updates, ks, residuals, block, codec=None):
     fn = (comp.topk_compress_batch if block is None else
           functools.partial(comp.block_topk_compress_batch, block=block))
+    if codec is not None:
+        base = fn
+        fn = lambda u, k_: (lambda c: comp.Compressed(
+            codec(c.values, c.mask), c.mask))(base(u, k_))
     if residuals is None:
         c = fn(updates, ks)
         return c.values, c.mask, None
@@ -123,12 +149,15 @@ def compress_clients(updates: jax.Array, crs: np.ndarray,
     reuses the same executable (the legacy loop re-lowered ``lax.top_k``
     per distinct static CR). Kernel-backed block top-k keeps the loop path
     (the Pallas kernel wants a static k); everything else is vectorized.
+    A registered ``value_codec`` rides along as a static arg (module-level
+    functions hash stably, so the jit cache stays warm).
     """
     if acfg.block_topk and comp.resolve_use_kernel(acfg.use_kernel):
         return compress_clients_loop(updates, crs, acfg, residuals)
     ks = jnp.asarray(ks_for_schedule(updates.shape[1], crs, acfg))
     block = acfg.block_size if acfg.block_topk else None
-    return _compress_batch(updates, ks, residuals, block)
+    return _compress_batch(updates, ks, residuals, block,
+                           acfg.strat.value_codec)
 
 
 def compress_clients_loop(updates: jax.Array, crs: np.ndarray,
@@ -167,29 +196,22 @@ def aggregate(updates: jax.Array, data_fracs: np.ndarray,
     (the seed behavior the fused round is benchmarked against); the default
     is the single-executable traced-k path.
     """
+    strat = acfg.strat
     k, n = updates.shape
     crs, weights, info = round_schedule(acfg, k, data_fracs, links, v_bytes)
-    compress = compress_clients_loop if use_loop else compress_clients
+    coeffs = jnp.asarray(weights, jnp.float32)
 
-    if acfg.strategy == "fedavg":
-        f = jnp.asarray(weights, jnp.float32)
-        agg = jnp.einsum("k,kn->n", f, updates.astype(jnp.float32))
+    if not strat.compresses:
+        agg = jnp.einsum("k,kn->n", coeffs, updates.astype(jnp.float32))
         return agg, info, None
 
-    if acfg.strategy in ("topk", "eftopk"):
-        res = residuals if acfg.strategy == "eftopk" else None
-        vals, masks, new_res = compress(updates, crs, acfg, res)
-        f = jnp.asarray(weights, jnp.float32)
-        agg = jnp.einsum("k,kn->n", f, vals.astype(jnp.float32))
-        return agg, info, new_res
-
-    # bcrs / bcrs_opwa
-    vals, masks, new_res = compress(updates, crs, acfg, residuals)
-    coeffs = jnp.asarray(weights, jnp.float32)
-    if acfg.strategy == "bcrs_opwa":
+    compress = compress_clients_loop if use_loop else compress_clients
+    res = residuals if strat.needs_residuals else None
+    vals, masks, new_res = compress(updates, crs, acfg, res)
+    if strat.overlap_weighted:
         agg = opwa_mod.opwa_aggregate(vals, masks, coeffs, acfg.gamma,
                                       acfg.overlap_d,
                                       use_kernel=acfg.use_kernel)
     else:
-        agg = opwa_mod.bcrs_aggregate(vals, coeffs)
+        agg = jnp.einsum("k,kn->n", coeffs, vals.astype(jnp.float32))
     return agg, info, new_res

@@ -1,0 +1,347 @@
+"""Strategy plugin registry: ONE declarative compressor/aggregator interface.
+
+Every FL round engine in the tree — the legacy eager loop
+(``fed.server.FLServer.round``), the fused per-round program
+(``fed.round_step``), the whole-simulation scan (``fed.engine.make_sim_scan``),
+the mesh per-leaf scan (``fed.engine.make_mesh_sim_scan`` /
+``fed.mesh_round``), and the compressed pod sync (``dist.grad_sync``) —
+consumes strategies exclusively through this registry. A ``Strategy``
+declares its *capabilities*; the engines dispatch on those capabilities and
+never match strategy names. This module is therefore the ONLY place in
+``src/`` allowed to mention strategy names structurally
+(``tools/check_strategy_enum.py`` enforces that in CI), which is what makes
+third-party strategies drop in without touching any engine file:
+
+    from repro.core import strategies
+
+    strategies.register(strategies.Strategy(
+        name="my_ef_topk",
+        description="Top-K with EF, my twist",
+        carry="ef", selector="topk", weighting="data",
+        wire=strategies.SPARSE32, megakernel=True))
+
+and ``my_ef_topk`` runs through every engine, CLI, and cost model.
+
+Capability fields (see docs/DESIGN.md §8 for the full table):
+
+  carry        what state threads across rounds per cohort slot:
+               "none" | "ef" (error-feedback residuals; engines allocate,
+               donate, reset-on-cohort-resize, and checkpoint the buffers).
+  selector     which survivor-selection family runs client-side: "none"
+               (dense — every coordinate survives) | "topk" (the traced-k
+               bit-pattern bisection; the block variant stays an engine-side
+               config knob orthogonal to the strategy).
+  value_codec  optional lossy wire codec applied to the surviving values:
+               ``codec(values [C, ...], mask) -> values`` (rank-agnostic,
+               leading client axis). The engines feed the DEQUANTIZED values
+               to both the merge and the EF residual update, so EF absorbs
+               the codec error automatically — which is why a codec REQUIRES
+               ``carry="ef"`` (without EF the codec error is silently
+               dropped bias; registration refuses it).
+  weighting    where averaging coefficients come from: "data" (data
+               fractions, uniform CR*) | "bcrs" (bandwidth schedule Alg. 2 +
+               Eq. 6 coefficients).
+  overlap_weighted  apply the OPWA overlap mask (Alg. 3) at the merge.
+  wire         ``WireFormat`` — declarative bytes-on-the-wire model feeding
+               ALL comm-time accounting (replaces the scattered
+               ``cr_eff = 1.0 if strategy == "fedavg"`` special cases).
+  megakernel   eligible for the traced-k Pallas pipeline (threshold_find +
+               fused_merge). Codec strategies must declare False: the kernel
+               has no dequantization stage (registration refuses the combo).
+
+Shape follows the builder-registry pattern (SNIPPETS.md snippet 3): a
+validating ``register`` over a name-keyed table, duplicate names refused.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Tuple
+
+import jax.numpy as jnp
+
+__all__ = [
+    "WireFormat", "Strategy", "StrategyRegistry", "REGISTRY",
+    "register", "unregister", "get", "names",
+    "DENSE32", "SPARSE32", "PACKED_INT8", "int8_symmetric_codec",
+]
+
+#: bytes per survivor of the paper's reference sparse pair (int32 index +
+#: f32 value) — the 2x factor inside ``core.bcrs.comm_time``'s
+#: ``T = L + 2 * V_bits * cr / B``. Every wire format's effective CR is
+#: normalized against this so the scheduler's time model needs no per-format
+#: branches.
+_REF_PAIR_BYTES = 8.0
+
+
+# ------------------------------------------------------------- wire format
+@dataclass(frozen=True)
+class WireFormat:
+    """Declarative bytes-on-the-wire model for one strategy.
+
+    ``dense`` formats ship the full f32 vector (no index overhead); the
+    authoritative dense round time is ``cost_model.uncompressed_round``
+    (T = L + V_bits / B). Sparse formats ship ``index_bytes + value_bytes``
+    per survivor plus ``overhead_bytes`` per client message (e.g. a
+    quantization scale).
+    """
+    kind: str                      # human-readable, lands in docs/README
+    dense: bool = False
+    index_bytes: float = 4.0
+    value_bytes: float = 4.0
+    overhead_bytes: float = 0.0
+
+    def bytes_on_wire(self, n_params: int, k) -> float:
+        """Exact payload bytes one client uploads: ``k`` survivors out of
+        ``n_params`` (``k`` ignored for dense formats)."""
+        if self.dense:
+            return 4.0 * n_params
+        return k * (self.index_bytes + self.value_bytes) + self.overhead_bytes
+
+    def cr_eff(self, cr, n_params: Optional[int] = None):
+        """Effective ratio to plug into the paper's ``comm_time`` (Alg. 2),
+        whose 2x factor prices the reference idx32+f32 pair: the cr that
+        makes ``comm_time`` charge exactly this format's bytes-on-the-wire.
+        Accepts scalars or numpy arrays (vectorized arithmetic).
+
+        Dense formats return 1.0 — the legacy convention the straggler
+        arrival ordering and the traced-sampling scan always used for
+        fedavg (authoritative dense *round* accounting goes through
+        ``uncompressed_round``, gated on ``wire.dense``). The reference
+        sparse pair returns ``cr`` unchanged (bit-identical to the
+        pre-registry accounting); packed formats scale it down honestly.
+        """
+        if self.dense:
+            return cr * 0.0 + 1.0 if hasattr(cr, "shape") else 1.0
+        pair = self.index_bytes + self.value_bytes
+        eff = cr if pair == _REF_PAIR_BYTES else cr * (pair / _REF_PAIR_BYTES)
+        if self.overhead_bytes:
+            if not n_params:
+                raise ValueError(
+                    f"wire format {self.kind!r} has per-message overhead; "
+                    "cr_eff needs n_params")
+            eff = eff + self.overhead_bytes / (_REF_PAIR_BYTES * n_params)
+        return eff
+
+
+DENSE32 = WireFormat(kind="dense f32", dense=True)
+SPARSE32 = WireFormat(kind="idx32 + f32", index_bytes=4.0, value_bytes=4.0)
+PACKED_INT8 = WireFormat(kind="idx32 + int8 + scale32",
+                         index_bytes=4.0, value_bytes=1.0,
+                         overhead_bytes=4.0)
+
+
+# ------------------------------------------------------------- value codecs
+#: symmetric int8 grid: wire values live in [-127, 127]
+INT8_LEVELS = 127.0
+
+
+def int8_symmetric_codec(values, mask):
+    """Per-client symmetric int8 quantization of the surviving values.
+
+    values: [C, ...] dense-masked survivors (rank-agnostic — the scale
+    reduces over ALL non-client axes, so per-leaf mesh layouts work
+    unreshaped); mask: matching bool (unused — zeros round to exactly zero
+    under the symmetric grid, so non-survivors stay zero).
+
+    Returns the DEQUANTIZED f32 values — what the server reconstructs from
+    the int8 wire payload. Feeding these to the EF residual update
+    (``corrected - sent``) makes error feedback absorb the quantization
+    error with no extra engine code.
+    """
+    del mask
+    v = values.astype(jnp.float32)
+    axes = tuple(range(1, v.ndim))
+    scale = jnp.max(jnp.abs(v), axis=axes, keepdims=True) / INT8_LEVELS
+    scale = jnp.maximum(scale, jnp.float32(1e-30))  # all-zero row -> zeros
+    q = jnp.clip(jnp.round(v / scale), -INT8_LEVELS, INT8_LEVELS)
+    return q * scale
+
+
+# ---------------------------------------------------------------- strategy
+_CARRIES = ("none", "ef")
+_SELECTORS = ("none", "topk")
+_WEIGHTINGS = ("data", "bcrs")
+
+
+@dataclass(frozen=True)
+class Strategy:
+    """Declarative capability record — see the module docstring for field
+    semantics. Frozen + hashable so it can ride as a static jit argument."""
+    name: str
+    description: str = ""
+    carry: str = "none"
+    selector: str = "topk"
+    value_codec: Optional[Callable] = None
+    weighting: str = "data"
+    overlap_weighted: bool = False
+    wire: WireFormat = field(default=SPARSE32)
+    megakernel: bool = True
+
+    @property
+    def compresses(self) -> bool:
+        """Whether clients sparsify before upload (drives compression work,
+        schedule CRs, and the sparse-vs-dense accounting split)."""
+        return self.selector != "none"
+
+    @property
+    def needs_residuals(self) -> bool:
+        """Whether engines must allocate/thread/donate EF residual buffers."""
+        return self.carry == "ef"
+
+
+# ---------------------------------------------------------------- registry
+class StrategyRegistry:
+    """Name-keyed table of validated ``Strategy`` records (the builder-
+    registry shape of SNIPPETS.md snippet 3, with duplicates refused instead
+    of warned — two strategies silently swapping under one name is exactly
+    the drift this registry exists to prevent)."""
+
+    def __init__(self):
+        self._strategies: dict = {}
+
+    # -- registration ----------------------------------------------------
+    def register(self, strategy: Strategy, *,
+                 override: bool = False) -> Strategy:
+        """Validate and register. Returns the strategy (decorator-friendly).
+
+        Raises ``ValueError`` on duplicate names (unless ``override=True``)
+        and on capability combinations no engine can honor — a registration-
+        time error beats five engines failing differently at trace time.
+        """
+        self._validate(strategy)
+        if strategy.name in self._strategies and not override:
+            raise ValueError(
+                f"strategy {strategy.name!r} is already registered "
+                f"(registered: {', '.join(self.names())}); pass "
+                "override=True to replace it")
+        self._strategies[strategy.name] = strategy
+        return strategy
+
+    @staticmethod
+    def _validate(strategy: Strategy) -> None:
+        if not isinstance(strategy, Strategy):
+            raise TypeError(f"expected Strategy, got {type(strategy)!r}")
+        if not strategy.name or not isinstance(strategy.name, str):
+            raise ValueError("strategy needs a non-empty string name")
+        if strategy.carry not in _CARRIES:
+            raise ValueError(
+                f"strategy {strategy.name!r}: unknown carry "
+                f"{strategy.carry!r} (one of {_CARRIES})")
+        if strategy.selector not in _SELECTORS:
+            raise ValueError(
+                f"strategy {strategy.name!r}: unknown selector "
+                f"{strategy.selector!r} (one of {_SELECTORS})")
+        if strategy.weighting not in _WEIGHTINGS:
+            raise ValueError(
+                f"strategy {strategy.name!r}: unknown weighting "
+                f"{strategy.weighting!r} (one of {_WEIGHTINGS})")
+        if not isinstance(strategy.wire, WireFormat):
+            raise ValueError(
+                f"strategy {strategy.name!r}: wire must be a WireFormat, "
+                f"got {type(strategy.wire)!r}")
+        if strategy.value_codec is not None:
+            if not callable(strategy.value_codec):
+                raise ValueError(
+                    f"strategy {strategy.name!r}: value_codec must be "
+                    "callable")
+            if strategy.carry != "ef":
+                raise ValueError(
+                    f"strategy {strategy.name!r}: a lossy value_codec "
+                    "requires carry='ef' — without error feedback the "
+                    "codec error is silently dropped bias")
+            if strategy.megakernel:
+                raise ValueError(
+                    f"strategy {strategy.name!r}: value_codec strategies "
+                    "must declare megakernel=False (the Pallas pipeline "
+                    "has no dequantization stage)")
+        if strategy.selector == "none":
+            if not strategy.wire.dense:
+                raise ValueError(
+                    f"strategy {strategy.name!r}: selector='none' ships "
+                    "every coordinate — declare a dense wire format")
+            if strategy.overlap_weighted:
+                raise ValueError(
+                    f"strategy {strategy.name!r}: overlap weighting needs "
+                    "survivor masks — selector='none' has none")
+        elif strategy.wire.dense:
+            raise ValueError(
+                f"strategy {strategy.name!r}: a sparsifying selector with "
+                "a dense wire format would misprice every upload")
+
+    def unregister(self, name: str) -> None:
+        """Remove a registration (test teardown; built-ins removable too —
+        there is nothing special about them)."""
+        self._strategies.pop(name, None)
+
+    # -- lookup ----------------------------------------------------------
+    def get(self, name: str) -> Strategy:
+        try:
+            return self._strategies[name]
+        except KeyError:
+            raise ValueError(
+                f"unknown strategy {name!r} (registered: "
+                f"{', '.join(self.names())})") from None
+
+    def names(self) -> Tuple[str, ...]:
+        return tuple(self._strategies)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._strategies
+
+    def __iter__(self):
+        return iter(self._strategies.values())
+
+
+#: the process-wide registry every engine/CLI/cost model reads
+REGISTRY = StrategyRegistry()
+register = REGISTRY.register
+unregister = REGISTRY.unregister
+get = REGISTRY.get
+names = REGISTRY.names
+
+
+# ---------------------------------------------------------------- built-ins
+# The paper's five strategies (Alg. 1), re-registered through the public
+# API — they get no private hooks, so they double as registration examples.
+register(Strategy(
+    name="fedavg",
+    description="uniform data-weighted average, no compression",
+    carry="none", selector="none", weighting="data",
+    wire=DENSE32, megakernel=False))
+
+register(Strategy(
+    name="topk",
+    description="data-weighted average of Top-K-compressed updates",
+    carry="none", selector="topk", weighting="data",
+    wire=SPARSE32, megakernel=True))
+
+register(Strategy(
+    name="eftopk",
+    description="Top-K with client-side error-feedback residuals",
+    carry="ef", selector="topk", weighting="data",
+    wire=SPARSE32, megakernel=True))
+
+register(Strategy(
+    name="bcrs",
+    description="per-client CRs from the bandwidth schedule (Alg. 2) "
+                "+ Eq. 6 coefficients",
+    carry="none", selector="topk", weighting="bcrs",
+    wire=SPARSE32, megakernel=True))
+
+register(Strategy(
+    name="bcrs_opwa",
+    description="BCRS + overlap-aware parameter weighting (Alg. 3)",
+    carry="none", selector="topk", weighting="bcrs",
+    overlap_weighted=True, wire=SPARSE32, megakernel=True))
+
+# Registry-only plugin (no engine file mentions it): int8-quantized Top-K
+# survivors — the FedSparQ sparsity-x-quantization direction. EF absorbs the
+# quantization error; the packed wire format (4+1 bytes/survivor + one f32
+# scale) makes its comm accounting honest, 8/5x cheaper than idx32+f32 at
+# equal sparsity.
+register(Strategy(
+    name="qtopk",
+    description="int8-quantized Top-K survivors with EF absorbing the "
+                "quantization error; packed-bytes wire accounting",
+    carry="ef", selector="topk", value_codec=int8_symmetric_codec,
+    weighting="data", wire=PACKED_INT8, megakernel=False))

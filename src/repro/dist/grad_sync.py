@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import strategies as strat_mod
 from repro.core.compression import k_for_ratio_traced, resolve_use_kernel
 from repro.fed.engine import compress_merge_leaf
 
@@ -109,7 +110,8 @@ def _is_wrapped(opt_state) -> bool:
 def make_compressed_train_step(model, opt, *, n_pods: int,
                                wire_cr: float = 0.05, gamma: float = 1.0,
                                min_leaf_size: int = 4096, overlap_d: int = 1,
-                               use_kernel="auto") -> Callable:
+                               use_kernel="auto",
+                               strategy: str = "bcrs_opwa") -> Callable:
     """Returns jittable
     ``step(params, opt_state, batch, pod_crs, pod_coeffs)``.
 
@@ -118,13 +120,28 @@ def make_compressed_train_step(model, opt, *, n_pods: int,
     coefficients p'_i (1/n_pods reproduces the dense mean). Leaves smaller
     than ``min_leaf_size`` are exchanged dense (their index overhead would
     exceed the savings — same cutoff the byte model uses).
+
+    ``strategy`` names a registered compressing strategy; its capabilities
+    pick the merge (``overlap_weighted`` -> OPWA vs plain coefficient sum)
+    and the optional ``value_codec`` (e.g. ``qtopk``'s int8 quantizer —
+    EF absorbs its quantization error, same contract as the FL engines).
+    Pod sync always runs error feedback: residuals are structural in the
+    wrapped optimizer state, so ``carry`` here only affects the codec's EF
+    interplay, not whether residuals exist.
     """
     if n_pods < 2:
         # with a single pod every kept coordinate has overlap 1 <= overlap_d,
         # so OPWA would silently scale all gradients by gamma (an LR change,
         # not a sync strategy) — use make_train_step instead
         raise ValueError(f"n_pods must be >= 2, got {n_pods}")
-    use_kernel = resolve_use_kernel(use_kernel)
+    strat = strat_mod.get(strategy)
+    if not strat.compresses:
+        raise ValueError(
+            f"strategy {strategy!r} does not compress; use make_train_step "
+            f"for dense sync")
+    opwa = strat.overlap_weighted
+    value_codec = strat.value_codec
+    use_kernel = resolve_use_kernel(use_kernel) and value_codec is None
     grad_fn = _grad_fn(model)
 
     def step(params, opt_state, batch, pod_crs, pod_coeffs):
@@ -161,8 +178,9 @@ def make_compressed_train_step(model, opt, *, n_pods: int,
                         .reshape(g.shape[1:]), e)
             ks = k_for_ratio_traced(n, crs)
             agg, new_e = compress_merge_leaf(
-                gf, coeffs, ks, gamma=gamma, overlap_d=overlap_d, opwa=True,
-                use_kernel=use_kernel, residuals=e.reshape(n_pods, n))
+                gf, coeffs, ks, gamma=gamma, overlap_d=overlap_d, opwa=opwa,
+                use_kernel=use_kernel, residuals=e.reshape(n_pods, n),
+                value_codec=value_codec)
             return agg.reshape(g.shape[1:]), new_e.reshape(e.shape)
 
         pairs = jax.tree.map(sync_leaf, grads, ef)

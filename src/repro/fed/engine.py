@@ -48,6 +48,7 @@ import numpy as np
 
 from repro.core import compression as comp
 from repro.core import opwa as opwa_mod
+from repro.core import strategies as strat_mod
 from repro.models import flags
 
 #: module-wide retrace telemetry for the scanned simulation:
@@ -56,8 +57,6 @@ from repro.models import flags
 #: tests/test_sim_scan.py).
 TRACE_COUNTS: collections.Counter = collections.Counter()
 
-STRATEGIES = ("fedavg", "topk", "eftopk", "bcrs", "bcrs_opwa")
-
 
 # ------------------------------------------------------------------- spec
 @dataclass(frozen=True)
@@ -65,7 +64,9 @@ class ClientUpdateSpec:
     """Static (trace-time) description of the per-client update pipeline:
     compress (traced-k Top-K / blockwise / EF) -> OPWA or weighted merge.
     All runtime quantities (per-client retained counts ``ks``, weights,
-    residuals) stay traced arguments of the functions below."""
+    residuals) stay traced arguments of the functions below. Everything
+    strategy-shaped is read from the capability record
+    (``core.strategies.get``) — this module never matches strategy names."""
     strategy: str = "fedavg"
     cr: float = 0.1                # static CR* (only the EF Pallas kernel
     block_topk: bool = False       # needs it — everything else is traced)
@@ -75,24 +76,29 @@ class ClientUpdateSpec:
     use_kernel: bool = False       # resolved bool (never "auto")
 
     def __post_init__(self):
-        if self.strategy not in STRATEGIES:
-            raise ValueError(f"unknown strategy {self.strategy!r}")
+        strat_mod.get(self.strategy)   # config-time error, names listed
+
+    @property
+    def strat(self) -> strat_mod.Strategy:
+        """The registered capability record (dict lookup — trace-time cheap)."""
+        return strat_mod.get(self.strategy)
 
     @property
     def needs_residuals(self) -> bool:
-        return self.strategy == "eftopk"
+        return self.strat.needs_residuals
 
     @property
     def use_megakernel(self) -> bool:
         # the traced-k Pallas pipeline (threshold_find + fused_merge) serves
         # every global-top-k strategy at per-client traced ks — the paper's
         # BCRS-faithful default. Block-top-k configs keep the traced-k jnp
-        # block path (per-block thresholds), and fedavg is already a single
-        # einsum pass. NOTE the old `use_ef_kernel` route (static-CR
+        # block path (per-block thresholds), dense strategies are already a
+        # single einsum pass, and codec strategies declare megakernel=False
+        # at registration. NOTE the old `use_ef_kernel` route (static-CR
         # ef_update kernel) is gone: it silently compressed at spec.cr even
         # when the schedule passed varying traced ks.
         return (self.use_kernel and not self.block_topk
-                and self.strategy in ("topk", "eftopk", "bcrs", "bcrs_opwa"))
+                and self.strat.megakernel and self.strat.compresses)
 
 
 def spec_for(acfg) -> ClientUpdateSpec:
@@ -105,11 +111,23 @@ def spec_for(acfg) -> ClientUpdateSpec:
 
 
 def compress_batch_fn(spec: ClientUpdateSpec) -> Callable:
-    """Batched traced-k compressor for the spec: [C, n], ks [C] -> Compressed."""
+    """Batched traced-k compressor for the spec: [C, n], ks [C] -> Compressed.
+    When the strategy declares a ``value_codec``, the survivors come back
+    already dequantized — downstream EF/merge code needs no codec branch."""
     if spec.block_topk:
-        return lambda u, ks: comp.block_topk_compress_batch(
+        base = lambda u, ks: comp.block_topk_compress_batch(
             u, ks, block=spec.block_size)
-    return comp.topk_compress_batch
+    else:
+        base = comp.topk_compress_batch
+    codec = spec.strat.value_codec
+    if codec is None:
+        return base
+
+    def compress(u, ks):
+        c = base(u, ks)
+        return comp.Compressed(codec(c.values, c.mask), c.mask)
+
+    return compress
 
 
 # ------------------------------------------------------------- flat <-> tree
@@ -198,7 +216,7 @@ def _aggregate_megakernel(spec: ClientUpdateSpec, updates: jax.Array,
     schedule passed varying traced ``ks`` — the megakernel honors the traced
     per-client counts exactly (regression-tested in
     tests/test_megakernel.py)."""
-    if spec.strategy == "bcrs_opwa":
+    if spec.strat.overlap_weighted:
         agg = opwa_mod.opwa_aggregate_traced_k(
             updates, ks, w, spec.gamma, spec.overlap_d, active=active,
             use_kernel=True)
@@ -229,8 +247,9 @@ def aggregate_updates(spec: ClientUpdateSpec, updates: jax.Array,
     Returns (agg [n] f32, new_residuals | None).
     """
     w = weights.astype(jnp.float32)
-    if spec.needs_residuals and residuals is None:
-        raise ValueError("eftopk needs residuals")
+    strat = spec.strat
+    if strat.needs_residuals and residuals is None:
+        raise ValueError(f"{spec.strategy} needs residuals")
     if spec.use_megakernel:
         # traced-k Pallas pipeline: selection thresholds + the whole
         # apply/merge in ~9 HBM passes; EF, OPWA, and active gating happen
@@ -241,15 +260,15 @@ def aggregate_updates(spec: ClientUpdateSpec, updates: jax.Array,
     mask = None
     new_res = residuals
 
-    if spec.strategy == "fedavg":
+    if not strat.compresses:
         vals = updates
-    elif spec.strategy == "eftopk":
+    elif strat.needs_residuals:
         c_obj, new_res = comp.ef_compress_batch(
             residuals, updates, ks, compress_batch=compress)
         vals, mask = c_obj.values, c_obj.mask
         if active is not None:
             new_res = jnp.where(active[:, None], new_res, residuals)
-    else:  # topk | bcrs | bcrs_opwa
+    else:
         c_obj = compress(updates, ks)
         vals, mask = c_obj.values, c_obj.mask
 
@@ -261,7 +280,7 @@ def aggregate_updates(spec: ClientUpdateSpec, updates: jax.Array,
         if mask is not None:
             mask = mask & active[:, None]
 
-    if spec.strategy == "bcrs_opwa":
+    if strat.overlap_weighted:
         agg = opwa_mod.opwa_aggregate(vals, mask, w, spec.gamma,
                                       spec.overlap_d,
                                       use_kernel=spec.use_kernel)
@@ -275,7 +294,8 @@ def compress_merge_leaf(updates: jax.Array, coeffs: jax.Array, ks: jax.Array,
                         *, gamma: float = 1.0, overlap_d: int = 1,
                         opwa: bool = True, use_kernel="auto",
                         residuals: Optional[jax.Array] = None,
-                        active: Optional[jax.Array] = None
+                        active: Optional[jax.Array] = None,
+                        value_codec: Optional[Callable] = None
                         ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """Compress + merge ONE leaf in its natural layout.
 
@@ -289,6 +309,10 @@ def compress_merge_leaf(updates: jax.Array, coeffs: jax.Array, ks: jax.Array,
     semantics as ``aggregate_updates``. ``use_kernel`` is the usual
     tri-state (True / False / "auto" = TPU only, resolved here via
     ``resolve_use_kernel`` so callers can pass "auto" straight through).
+    ``value_codec`` (a registry ``Strategy.value_codec``) is applied to the
+    survivors before the merge AND before the residual update, so EF absorbs
+    the codec error; codec leaves keep the jnp lowering (the megakernel has
+    no dequantization stage).
 
     The kernel route runs the whole leaf through the traced-k megakernel
     pipeline (``threshold_find`` + ``fused_merge``) on a [C, leaf_n] view —
@@ -303,7 +327,7 @@ def compress_merge_leaf(updates: jax.Array, coeffs: jax.Array, ks: jax.Array,
     w = coeffs.astype(jnp.float32)
     if active is not None:
         w = jnp.where(active, w, 0.0)
-    if comp.resolve_use_kernel(use_kernel):
+    if value_codec is None and comp.resolve_use_kernel(use_kernel):
         from repro.kernels import ops as kops
         c, shape = updates.shape[0], updates.shape[1:]
         u2 = updates.astype(jnp.float32).reshape(c, -1)
@@ -320,6 +344,8 @@ def compress_merge_leaf(updates: jax.Array, coeffs: jax.Array, ks: jax.Array,
         x = residuals + x
     c_obj = jax.vmap(comp.topk_compress_dynamic)(x, ks)
     vals, mask = c_obj.values, c_obj.mask
+    if value_codec is not None:
+        vals = value_codec(vals, mask)
     new_res = (x - vals) if residuals is not None else None
     if active is not None:
         # padded rows are all-zero updates whose tie-at-zero Top-K mask is
@@ -550,7 +576,7 @@ def make_mesh_sim_scan(loss_fn: Callable, params_template, *, lr: float,
     body_fn = make_round_body(loss_fn, lr_local=lr, eta=eta,
                               strategy=strategy, gamma=gamma,
                               overlap_d=overlap_d, use_kernel=use_kernel)
-    ef = strategy == "eftopk"
+    ef = strat_mod.get(strategy).needs_residuals
 
     def scan_body(carry, x):
         params, res = carry

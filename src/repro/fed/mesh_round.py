@@ -32,8 +32,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import compression as comp
-from repro.fed.engine import (STRATEGIES, compress_merge_leaf,
-                              make_masked_local_trainer)
+from repro.core import strategies as strat_mod
+from repro.fed.engine import compress_merge_leaf, make_masked_local_trainer
 
 #: retrace telemetry for the per-round mesh step: (strategy,) -> traces.
 #: The scanned driver's counter lives in engine.TRACE_COUNTS under
@@ -51,8 +51,8 @@ def make_round_body(loss_fn: Callable, *, lr_local: float = 1e-2,
     active) -> (new_params, new_residuals, loss)``:
 
       params      pytree (leaves keep their dtypes/shardings);
-      residuals   per-leaf EF pytree ([C, *leaf] f32) — required iff
-                  ``strategy == "eftopk"``, pass None otherwise;
+      residuals   per-leaf EF pytree ([C, *leaf] f32) — required iff the
+                  registered strategy carries EF, pass None otherwise;
       batches     pytree with leading [C, S, ...] axes (C cohort slots,
                   sharded over the batch mesh axes);
       step_mask   bool [C, S] — padded local steps are exact no-ops;
@@ -67,16 +67,16 @@ def make_round_body(loss_fn: Callable, *, lr_local: float = 1e-2,
     The reported loss is the active-masked mean of each client's last real
     local step's pre-update loss (``make_masked_local_trainer`` semantics).
     """
-    if strategy not in STRATEGIES:
-        raise ValueError(f"unknown strategy {strategy!r}")
-    ef = strategy == "eftopk"
-    compress = strategy != "fedavg"
-    opwa = strategy == "bcrs_opwa"
+    strat = strat_mod.get(strategy)   # config-time error, names listed
+    ef = strat.needs_residuals
+    compress = strat.compresses
+    opwa = strat.overlap_weighted
+    value_codec = strat.value_codec
     local_train = make_masked_local_trainer(loss_fn, lr_local)
 
     def body(params, residuals, batches, step_mask, coeffs, crs, active):
         if ef and residuals is None:
-            raise ValueError("eftopk needs per-leaf residuals")
+            raise ValueError(f"{strategy} needs per-leaf residuals")
         deltas, losses = jax.vmap(local_train, in_axes=(None, 0, 0))(
             params, batches, step_mask)
         w = coeffs.astype(jnp.float32)
@@ -99,7 +99,8 @@ def make_round_body(loss_fn: Callable, *, lr_local: float = 1e-2,
                 ks = comp.k_for_ratio_traced(n, crs)
                 agg, new_res = compress_merge_leaf(
                     dl, w, ks, gamma=gamma, overlap_d=overlap_d, opwa=opwa,
-                    use_kernel=use_kernel, residuals=res, active=active)
+                    use_kernel=use_kernel, residuals=res, active=active,
+                    value_codec=value_codec)
             return (p.astype(jnp.float32) - eta * agg).astype(p.dtype), new_res
 
         leaves_p, treedef = jax.tree.flatten(params)

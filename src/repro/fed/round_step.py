@@ -109,6 +109,6 @@ def make_round_step(loss_fn: Callable, params_template, *, lr: float,
     # only emit "donated buffers were not usable" warnings. Their staging
     # cost is hidden instead by the harness's double-buffered prefetch
     # (simulation.run_fl stages round r+1 while round r computes).
-    donate = (0, 1) if strategy == "eftopk" else (0,)
+    donate = (0, 1) if spec.needs_residuals else (0,)
     fn = jax.jit(_step, donate_argnums=donate)
     return FusedRoundStep(fn, strategy, with_overlap)

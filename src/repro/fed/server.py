@@ -31,6 +31,7 @@ from repro.core import aggregation as agg_mod
 from repro.core import bcrs as bcrs_mod
 from repro.core import cost_model
 from repro.core.compression import flatten_tree
+from repro.core import strategies as strat_mod
 
 
 @dataclass
@@ -57,14 +58,20 @@ class FLServer:
                 if self.links is not None else None)
 
     def _account_time(self, info: dict, links) -> None:
-        """Paper §5.2 metrics, shared by both round paths."""
+        """Paper §5.2 metrics, shared by both round paths. The strategy's
+        declared wire format prices the uploads: dense formats take the
+        no-index-overhead ``uncompressed_round``; sparse formats map their
+        schedule CRs through ``wire.cr_eff`` (identity for the reference
+        idx32+f32 pair, honestly smaller for packed formats like qtopk)."""
         if links is None:
             return
-        crs = info.get("crs", np.ones(len(links)))
-        if self.acfg.strategy == "fedavg":
+        wire = strat_mod.get(self.acfg.strategy).wire
+        if wire.dense:
             rt = cost_model.uncompressed_round(links, self.v_bytes)
         else:
-            rt = cost_model.round_times(links, self.v_bytes, crs)
+            crs = info.get("crs", np.ones(len(links)))
+            rt = cost_model.round_times(links, self.v_bytes,
+                                        wire.cr_eff(crs, self.n_params))
         self.times.add(rt)
         info["round_time"] = rt
 
@@ -78,7 +85,7 @@ class FLServer:
         flat_updates = jnp.stack([flatten_tree(d)[0].astype(jnp.float32)
                                   for d in client_deltas])
         links = self._selected_links(selected)
-        if self.acfg.strategy == "eftopk":
+        if self.acfg.strat.needs_residuals:
             if (self._residuals is None
                     or self._residuals.shape[0] != flat_updates.shape[0]):
                 self._residuals = jnp.zeros_like(flat_updates)
@@ -132,7 +139,7 @@ class FLServer:
             ks_overlap = ks    # ignored by the non-instrumented step
 
         residuals = None
-        if self.acfg.strategy == "eftopk":
+        if self.acfg.strat.needs_residuals:
             if (self._residuals is None
                     or self._residuals.shape[0] != k):
                 self._residuals = jnp.zeros((k, self.n_params), jnp.float32)
@@ -142,7 +149,7 @@ class FLServer:
         out = step(self._flat, residuals, batches, step_mask,
                    jnp.asarray(weights, jnp.float32), ks, ks_overlap)
         self._flat = out["flat"]
-        if self.acfg.strategy == "eftopk":
+        if self.acfg.strat.needs_residuals:
             self._residuals = out["residuals"]
         self.params = self._unravel(self._flat)
         info["loss"] = out["loss"]

@@ -230,8 +230,10 @@ def plan_cohort(rnd: int, rng, *, n_clients: int, participation: float,
         if len(selected) == 0:
             return None
     if straggler is not None and len(selected) > n_sel:
-        # completion times from the paper cost model at the configured CR
-        cr_eff = 1.0 if acfg.strategy == "fedavg" else acfg.cr
+        # completion times from the paper cost model at the configured CR,
+        # priced through the strategy's declared wire format (dense -> 1.0,
+        # the legacy fedavg convention; packed formats scale honestly)
+        cr_eff = acfg.strat.wire.cr_eff(acfg.cr, int(v_bytes // 4))
         t = np.array([bcrs_mod.comm_time(v_bytes, links[c], cr_eff)
                       for c in selected])
         chosen, _ = arrivals(t, n_sel, straggler)
@@ -407,7 +409,7 @@ def run_fl(sim: FLSimConfig, acfg: agg_mod.AggregationConfig,
 
     result.times = server.times
     result.final_accuracy = result.accuracies[-1][1] if result.accuracies else 0.0
-    if acfg.strategy == "eftopk" and server._residuals is not None:
+    if acfg.strat.needs_residuals and server._residuals is not None:
         result.final_residuals = np.asarray(server._residuals)
     if overlap_hists:
         result.overlap_hist = overlap_hists[0]
@@ -425,7 +427,7 @@ def _run_scan(sim, acfg, rng, clients, parts, fracs_all, links, server,
     n_sel = cohort_slots(sim.n_clients, sim.participation)
     n_params, v_bytes = server.n_params, server.v_bytes
     bs = sim.batch_size
-    ef = acfg.strategy == "eftopk"
+    ef = acfg.strat.needs_residuals
 
     plans = []          # (rnd, selected, weights, ks, ks_overlap, idx)
     for rnd in range(sim.rounds):
@@ -581,7 +583,7 @@ def run_fl_traced(sim: FLSimConfig, acfg: agg_mod.AggregationConfig,
     crs_all, coeffs_all, info = agg_mod.round_schedule(
         acfg, n, fracs_all / fracs_all.sum(), links, v_bytes)
     ks_all = agg_mod.ks_for_schedule(n_params, crs_all, acfg)
-    cr_eff = 1.0 if acfg.strategy == "fedavg" else acfg.cr
+    cr_eff = acfg.strat.wire.cr_eff(acfg.cr, n_params)
     times_all = np.array([bcrs_mod.comm_time(v_bytes, l, cr_eff)
                           for l in links], np.float32)
     lens = np.array([len(ds) for ds in clients], np.int64)
@@ -599,7 +601,7 @@ def run_fl_traced(sim: FLSimConfig, acfg: agg_mod.AggregationConfig,
         table=jnp.asarray(table),
         smask=jnp.asarray(smask_all),
         x=jnp.asarray(x_train), y=jnp.asarray(y_train))
-    weighted_by_coeffs = acfg.strategy in ("bcrs", "bcrs_opwa")
+    weighted_by_coeffs = acfg.strat.weighting == "bcrs"
 
     def plan_fn(xrow):
         k_perm, k_fail, k_batch = jax.random.split(xrow["key"], 3)
@@ -632,7 +634,7 @@ def run_fl_traced(sim: FLSimConfig, acfg: agg_mod.AggregationConfig,
     sim_fn = engine_mod.make_sim_scan(
         mlp_loss, server.params, lr=sim.lr, acfg=acfg, eta=server.eta,
         make_batches=gather_batches, plan_fn=plan_fn)
-    ef = acfg.strategy == "eftopk"
+    ef = acfg.strat.needs_residuals
     residuals0 = (jnp.zeros((n_draw, n_params), jnp.float32) if ef
                   else jnp.zeros((0,), jnp.float32))
     # eval bookkeeping is host-known even under traced sampling: the scanned

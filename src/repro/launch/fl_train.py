@@ -39,6 +39,7 @@ from repro import checkpoint as ckpt
 from repro.configs import ARCH_IDS, get_config
 from repro.core import bcrs as bcrs_mod
 from repro.core import cost_model
+from repro.core import strategies as strat_mod
 from repro.core.aggregation import AggregationConfig
 from repro.data import synthetic_lm_tokens
 from repro.fed import engine as engine_mod
@@ -46,8 +47,6 @@ from repro.fed.mesh_round import make_mesh_round_step
 from repro.fed.simulation import cohort_slots, plan_cohort
 from repro.ft import FailureInjector, StragglerPolicy
 from repro.models import Model
-
-STRATEGY_CHOICES = ("fedavg", "topk", "eftopk", "bcrs", "bcrs_opwa")
 
 #: scan-chunk cap when no checkpoint cadence is configured — keeps the
 #: device-resident per-chunk batch buffers O(MAX_CHUNK) instead of O(rounds)
@@ -84,6 +83,9 @@ class FLTrainConfig:
     use_kernel: object = "auto"
     seed: int = 0
     verbose: bool = True
+
+    def __post_init__(self):
+        strat_mod.get(self.strategy)   # config-time error, names listed
 
 
 @dataclass
@@ -138,15 +140,18 @@ def _build_plan(cfg: FLTrainConfig, rng, fracs_all, links, v_bytes,
         bw[i, :c_r] = [links[c].bandwidth_bps for c in sel]
         lat[i, :c_r] = [links[c].latency_s for c in sel]
 
-    if cfg.strategy in ("bcrs", "bcrs_opwa"):
+    strat = strat_mod.get(cfg.strategy)
+    if strat.weighting == "bcrs":
         crs, coeffs, _ = bcrs_mod.make_schedule_batch(
             bw, lat, fr_pad, v_bytes, cfg.cr, cfg.alpha, active=active)
         weights = coeffs.astype(np.float32)
         crs = crs.astype(np.float32)
     else:
         weights = fr_pad.astype(np.float32)
-        cr_eff = 1.0 if cfg.strategy == "fedavg" else cfg.cr
-        crs = np.where(active, np.float32(cr_eff), np.float32(0.0))
+        # plan.crs are SELECTION ratios (they feed k_for_ratio_traced in the
+        # round body); wire pricing is applied at accounting time
+        cr_sel = cfg.cr if strat.compresses else 1.0
+        crs = np.where(active, np.float32(cr_sel), np.float32(0.0))
 
     step_mask = np.zeros((t, c_max, cfg.local_steps), bool)
     step_mask[active] = True
@@ -185,7 +190,8 @@ def run(cfg: FLTrainConfig) -> dict:
     n_flat = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
     v_bytes = 4.0 * n_flat
     c_max = cohort_slots(cfg.clients, cfg.participation)
-    ef = cfg.strategy == "eftopk"
+    strat = strat_mod.get(cfg.strategy)
+    ef = strat.needs_residuals
 
     acfg = AggregationConfig(strategy=cfg.strategy, cr=cfg.cr,
                              alpha=cfg.alpha, gamma=cfg.gamma,
@@ -250,8 +256,11 @@ def run(cfg: FLTrainConfig) -> dict:
         rnd = plan.rounds[i]
         sel = plan.selected[i][plan.active[i]]
         links_sel = [links[c] for c in sel]
-        times.add(cost_model.round_times(links_sel, v_bytes,
-                                         plan.crs[i][plan.active[i]]))
+        # selection CRs priced through the declared wire format (identity
+        # for idx32+f32 strategies, dense 1.0 for fedavg — the driver's
+        # legacy accounting — and honestly packed for e.g. qtopk)
+        crs_wire = strat.wire.cr_eff(plan.crs[i][plan.active[i]], n_flat)
+        times.add(cost_model.round_times(links_sel, v_bytes, crs_wire))
         losses.append(loss)
         wall_per_round.append(wall)
         if cfg.verbose:
@@ -329,7 +338,7 @@ def main():
     ap.add_argument("--local-steps", type=int, default=2)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)
-    ap.add_argument("--strategy", choices=STRATEGY_CHOICES,
+    ap.add_argument("--strategy", choices=strat_mod.names(),
                     default="bcrs_opwa")
     ap.add_argument("--cr", type=float, default=0.05)
     ap.add_argument("--alpha", type=float, default=1.0)

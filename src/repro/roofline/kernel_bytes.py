@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import strategies as strat_mod
 from repro.roofline.hlo_cost import analyze_hlo
 
 _F32 = 4
@@ -46,10 +47,21 @@ def megakernel_hbm_bytes(c: int, n: int, strategy: str) -> dict:
 
     Returns ``{"threshold", "merge", "total", "passes"}`` where ``passes``
     is total / (C*n*4) — logical full reads of the update matrix.
+
+    The strategy's registered capabilities drive the accounting: the EF
+    residual stream follows ``needs_residuals``, and strategies that declare
+    ``megakernel=False`` (dense exchange, or wire formats the pipeline has
+    no stage for, e.g. qtopk's int8 codec) are rejected rather than priced
+    with a model that does not match their lowering.
     """
     from repro.kernels.fused_merge import TILE_N as MERGE_TILE
     from repro.kernels.threshold_find import SWEEPS
-    ef = strategy == "eftopk"
+    strat = strat_mod.get(strategy)
+    if not strat.megakernel:
+        raise ValueError(
+            f"strategy {strategy!r} does not route through the megakernel "
+            f"pipeline (megakernel=False); its traffic is not modeled here")
+    ef = strat.needs_residuals
     n_pad = _pad_to(n, MERGE_TILE)  # one padding serves both kernels
     mat = c * n_pad * _F32
     n_ops = 2 if ef else 1          # (updates[, residuals]) streamed tiles

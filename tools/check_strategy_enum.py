@@ -1,0 +1,69 @@
+#!/usr/bin/env python
+"""CI guard: no strategy-name matching outside the registry module.
+
+The strategy registry (``src/repro/core/strategies.py``) is the ONLY place
+allowed to know strategy names; every engine must dispatch on registered
+capabilities (``strat.compresses``, ``strat.needs_residuals``,
+``strat.weighting``, ``strat.overlap_weighted``, ``strat.wire``, ...).
+This is what makes registry-only strategies (e.g. ``qtopk``) drop into all
+five engines without editing them — and this script is what keeps it true.
+
+Scans ``src/`` and ``benchmarks/`` (tests may pin names: they assert parity
+of specific strategies) for comparisons against a ``strategy`` variable::
+
+    strategy == ...     strategy != ...
+    strategy in (...)   strategy in [...]   strategy not in ...
+
+Exits nonzero listing offending ``path:line`` sites.
+
+    python tools/check_strategy_enum.py [repo_root]
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+SCAN_DIRS = ("src", "benchmarks")
+EXEMPT = {pathlib.PurePosixPath("src/repro/core/strategies.py")}
+
+# `<something>strategy` identifier (spec.strategy, cfg.strategy, strategy)
+# followed by an equality or membership test against literals
+_PAT = re.compile(
+    r"\bstrategy\s*(?:==|!=|(?:not\s+)?in\s*[(\[{])")
+
+
+def check(root: pathlib.Path) -> list[str]:
+    bad: list[str] = []
+    for d in SCAN_DIRS:
+        base = root / d
+        if not base.is_dir():
+            continue
+        for path in sorted(base.rglob("*.py")):
+            rel = path.relative_to(root)
+            if pathlib.PurePosixPath(rel.as_posix()) in EXEMPT:
+                continue
+            for lineno, line in enumerate(
+                    path.read_text().splitlines(), start=1):
+                code = line.split("#", 1)[0]
+                if _PAT.search(code):
+                    bad.append(f"{rel.as_posix()}:{lineno}: {line.strip()}")
+    return bad
+
+
+def main() -> int:
+    root = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else ".").resolve()
+    bad = check(root)
+    if bad:
+        print("strategy-name matching outside the registry module "
+              "(dispatch on registry capabilities instead — see "
+              "src/repro/core/strategies.py):")
+        for b in bad:
+            print(f"  {b}")
+        return 1
+    print(f"OK: no strategy enum comparisons in {'/'.join(SCAN_DIRS)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

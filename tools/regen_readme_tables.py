@@ -1,0 +1,112 @@
+#!/usr/bin/env python
+"""Regenerate the README's strategies/engines tables from the strategy
+registry (``repro.core.strategies``), so docs cannot drift from code: a new
+``strategies.register(...)`` call shows up in the README by re-running
+
+    PYTHONPATH=src python tools/regen_readme_tables.py          # rewrite
+    PYTHONPATH=src python tools/regen_readme_tables.py --check  # CI drift gate
+
+Tables are replaced between marker comments::
+
+    <!-- registry:strategies:begin --> ... <!-- registry:strategies:end -->
+    <!-- registry:engines:begin -->    ... <!-- registry:engines:end -->
+
+The strategies table is rendered straight from the registered capability
+records; the engines table lists the registry's consumers (every engine
+dispatches on capabilities only — enforced by tools/check_strategy_enum.py).
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.core import strategies  # noqa: E402
+
+
+#: the five registry consumers — kept here, next to the registry-driven
+#: table, so one command regenerates both
+ENGINE_ROWS = [
+    ("`legacy`", "per-client eager loop", "simulation MLP",
+     "`fed/server.py`"),
+    ("`fused`", "1 jit dispatch per round", "simulation MLP, flat `[n]`",
+     "`fed/round_step.py`"),
+    ("`scan`", "1 `lax.scan` per simulation",
+     "flat `[n]` + `[C, n]` EF carry", "`engine.make_sim_scan`"),
+    ("mesh `round` (`fl_train --engine round`)", "1 jit dispatch per round",
+     "real sharded arch, params pytree", "`fed/mesh_round.py`"),
+    ("mesh `scan` (`fl_train` default)", "1 `lax.scan` per checkpoint chunk",
+     "params pytree + per-leaf `[C, *leaf]` EF carry",
+     "`engine.make_mesh_sim_scan`"),
+]
+
+
+def _table(header: list[str], rows: list[list[str]]) -> str:
+    lines = ["| " + " | ".join(header) + " |",
+             "|" + "---|" * len(header)]
+    lines += ["| " + " | ".join(r) + " |" for r in rows]
+    return "\n".join(lines)
+
+
+def strategies_table() -> str:
+    rows = []
+    for name in strategies.names():
+        s = strategies.get(name)
+        rows.append([
+            f"`{name}`",
+            s.carry,
+            s.selector,
+            f"`{s.value_codec.__name__}`" if s.value_codec else "—",
+            s.weighting + (" + OPWA" if s.overlap_weighted else ""),
+            s.wire.kind,
+            "yes" if s.megakernel else "no",
+            s.description,
+        ])
+    return _table(["name", "carry", "selector", "value codec", "weighting",
+                   "wire format", "megakernel", "description"], rows)
+
+
+def engines_table() -> str:
+    return _table(["engine", "granularity", "model / carry", "module"],
+                  [list(r) for r in ENGINE_ROWS])
+
+
+def splice(text: str, tag: str, body: str) -> str:
+    begin = f"<!-- registry:{tag}:begin -->"
+    end = f"<!-- registry:{tag}:end -->"
+    pat = re.compile(re.escape(begin) + r".*?" + re.escape(end), re.DOTALL)
+    if not pat.search(text):
+        raise SystemExit(f"README is missing the {begin} / {end} markers")
+    return pat.sub(f"{begin}\n{body}\n{end}", text)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if the README tables are stale")
+    args = ap.parse_args()
+    readme = ROOT / "README.md"
+    old = readme.read_text()
+    new = splice(old, "strategies", strategies_table())
+    new = splice(new, "engines", engines_table())
+    if args.check:
+        if new != old:
+            print("README tables are stale — run "
+                  "PYTHONPATH=src python tools/regen_readme_tables.py")
+            return 1
+        print("OK: README tables match the registry")
+        return 0
+    if new != old:
+        readme.write_text(new)
+        print("README.md tables regenerated from the registry")
+    else:
+        print("README.md tables already current")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
