@@ -53,7 +53,11 @@ def _np_dtype(s: str):
 
 
 def save(ckpt_dir: str, step: int, tree, extra: Optional[dict] = None,
-         keep: int = 3) -> str:
+         keep: Optional[int] = 3) -> str:
+    """Write ``step_<step>.msgpack`` atomically. ``keep`` retains the newest
+    K steps; ``keep=None`` disables retention entirely (keep every file) —
+    the population client-state store uses one file per chunk with the chunk
+    id as the step, where pruning "old steps" would delete live clients."""
     os.makedirs(ckpt_dir, exist_ok=True)
     flat = _flatten(tree)
     payload: Dict[str, Any] = {"step": step, "extra": extra or {}, "leaves": {}}
@@ -76,7 +80,9 @@ def save(ckpt_dir: str, step: int, tree, extra: Optional[dict] = None,
     return final
 
 
-def _apply_retention(ckpt_dir: str, keep: int) -> None:
+def _apply_retention(ckpt_dir: str, keep: Optional[int]) -> None:
+    if keep is None:
+        return
     steps = list_steps(ckpt_dir)
     for s in steps[:-keep]:
         try:

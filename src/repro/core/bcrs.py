@@ -34,6 +34,19 @@ def comm_time(v_bytes: float, link: ClientLink, cr: float) -> float:
     return link.latency_s + 2.0 * v_bits * cr / link.bandwidth_bps
 
 
+def comm_time_batch(v_bytes: float, bandwidths_bps: np.ndarray,
+                    latencies_s: np.ndarray, crs) -> np.ndarray:
+    """Vectorized ``comm_time`` over link arrays (population-scale cohort
+    planning). Elementwise float64 with the same operation order as the
+    scalar form, so ``comm_time_batch(v, bw, lat, cr)[i]`` is bit-identical
+    to ``comm_time(v, ClientLink(bw[i], lat[i]), cr_i)`` — the host-side
+    planners can vectorize without perturbing committed golden times."""
+    bw = np.asarray(bandwidths_bps, np.float64)
+    lat = np.asarray(latencies_s, np.float64)
+    v_bits = 8.0 * v_bytes
+    return lat + 2.0 * v_bits * np.asarray(crs, np.float64) / bw
+
+
 def schedule_crs(links: Sequence[ClientLink], v_bytes: float, cr_star: float,
                  cr_max: float = 1.0) -> np.ndarray:
     """Alg. 2: equalize upload completion times at the slowest client's pace."""

@@ -14,13 +14,48 @@ import numpy as np
 from repro.core.bcrs import ClientLink, comm_time
 
 
+@dataclass(frozen=True)
+class LinkArrays:
+    """Column-major link table: the population-scale twin of a
+    ``List[ClientLink]``. Keeps bandwidth/latency as float64 arrays so
+    cohort planning indexes O(C) numpy slices (``bandwidth_bps[ids]``)
+    instead of touching P Python objects, while ``links[i]`` still yields a
+    ``ClientLink`` for the per-client accounting paths."""
+    bandwidth_bps: np.ndarray
+    latency_s: np.ndarray
+
+    def __len__(self) -> int:
+        return self.bandwidth_bps.shape[0]
+
+    def __getitem__(self, i) -> ClientLink:
+        return ClientLink(bandwidth_bps=float(self.bandwidth_bps[i]),
+                          latency_s=float(self.latency_s[i]))
+
+    def __iter__(self):
+        for i in range(len(self)):
+            yield self[i]
+
+    def take(self, ids) -> "LinkArrays":
+        return LinkArrays(self.bandwidth_bps[ids], self.latency_s[ids])
+
+
+def sample_link_arrays(n: int, rng: np.random.Generator,
+                       bw_mean_mbps: float = 1.0, bw_sd_mbps: float = 0.2,
+                       lat_lo: float = 0.05, lat_hi: float = 0.2
+                       ) -> LinkArrays:
+    """Array-form ``sample_links``: identical rng draws, identical values
+    (``sample_links(n, rng)[i] == sample_link_arrays(n, rng)[i]`` for equal
+    generator states), but O(1) Python objects for P up to 10^6."""
+    bw = np.maximum(rng.normal(bw_mean_mbps, bw_sd_mbps, n), 0.05) * 1e6
+    lat = rng.uniform(lat_lo, lat_hi, n)
+    return LinkArrays(bandwidth_bps=bw, latency_s=lat)
+
+
 def sample_links(n: int, rng: np.random.Generator,
                  bw_mean_mbps: float = 1.0, bw_sd_mbps: float = 0.2,
                  lat_lo: float = 0.05, lat_hi: float = 0.2) -> List[ClientLink]:
-    bw = np.maximum(rng.normal(bw_mean_mbps, bw_sd_mbps, n), 0.05) * 1e6
-    lat = rng.uniform(lat_lo, lat_hi, n)
-    return [ClientLink(bandwidth_bps=float(b), latency_s=float(l))
-            for b, l in zip(bw, lat)]
+    la = sample_link_arrays(n, rng, bw_mean_mbps, bw_sd_mbps, lat_lo, lat_hi)
+    return list(la)
 
 
 @dataclass

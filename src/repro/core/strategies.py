@@ -45,6 +45,25 @@ Capability fields (see docs/DESIGN.md §8 for the full table):
   wire         ``WireFormat`` — declarative bytes-on-the-wire model feeding
                ALL comm-time accounting (replaces the scattered
                ``cr_eff = 1.0 if strategy == "fedavg"`` special cases).
+  residual_layout  how the population client-state store persists this
+               strategy's EF residual between participations (only
+               meaningful for ``carry="ef"``):
+               "dense"            residual may be nonzero anywhere (e.g. a
+                                  value codec leaves quantization error at
+                                  the SURVIVOR coordinates too — qtopk);
+                                  the store keeps full f32 rows, chunked
+                                  and spilled but not sparsified.
+               "topk_complement"  residual is nonzero only on the dropped
+                                  coordinates of the client's last
+                                  participation (pure Top-K selection under
+                                  EF: survivors are sent exactly, so their
+                                  residual is zero). nnz <= n - k, so the
+                                  store persists (idx32, f32) pairs of
+                                  static width n - k_min — O(P*(n-k_min))
+                                  instead of O(P*n). Requires
+                                  selector="topk" and no value_codec
+                                  (registration refuses layouts the math
+                                  can't honor).
   megakernel   eligible for the traced-k Pallas pipeline (threshold_find +
                fused_merge). Codec strategies must declare False: the kernel
                has no dequantization stage (registration refuses the combo).
@@ -161,6 +180,7 @@ def int8_symmetric_codec(values, mask):
 _CARRIES = ("none", "ef")
 _SELECTORS = ("none", "topk")
 _WEIGHTINGS = ("data", "bcrs")
+_RESIDUAL_LAYOUTS = ("dense", "topk_complement")
 
 
 @dataclass(frozen=True)
@@ -176,6 +196,7 @@ class Strategy:
     overlap_weighted: bool = False
     wire: WireFormat = field(default=SPARSE32)
     megakernel: bool = True
+    residual_layout: str = "dense"
 
     @property
     def compresses(self) -> bool:
@@ -254,6 +275,27 @@ class StrategyRegistry:
                     f"strategy {strategy.name!r}: value_codec strategies "
                     "must declare megakernel=False (the Pallas pipeline "
                     "has no dequantization stage)")
+        if strategy.residual_layout not in _RESIDUAL_LAYOUTS:
+            raise ValueError(
+                f"strategy {strategy.name!r}: unknown residual_layout "
+                f"{strategy.residual_layout!r} (one of {_RESIDUAL_LAYOUTS})")
+        if strategy.residual_layout == "topk_complement":
+            if strategy.carry != "ef":
+                raise ValueError(
+                    f"strategy {strategy.name!r}: residual_layout="
+                    "'topk_complement' describes EF residuals — requires "
+                    "carry='ef'")
+            if strategy.selector != "topk":
+                raise ValueError(
+                    f"strategy {strategy.name!r}: residual_layout="
+                    "'topk_complement' holds only the dropped coordinates "
+                    "of a Top-K selection — requires selector='topk'")
+            if strategy.value_codec is not None:
+                raise ValueError(
+                    f"strategy {strategy.name!r}: a value_codec leaves "
+                    "quantization error at the survivor coordinates, so "
+                    "the EF residual is dense — declare "
+                    "residual_layout='dense'")
         if strategy.selector == "none":
             if not strategy.wire.dense:
                 raise ValueError(
@@ -319,7 +361,7 @@ register(Strategy(
     name="eftopk",
     description="Top-K with client-side error-feedback residuals",
     carry="ef", selector="topk", weighting="data",
-    wire=SPARSE32, megakernel=True))
+    wire=SPARSE32, megakernel=True, residual_layout="topk_complement"))
 
 register(Strategy(
     name="bcrs",

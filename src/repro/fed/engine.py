@@ -161,6 +161,41 @@ def flatten_client_trees(deltas) -> jax.Array:
         axis=1)
 
 
+# ------------------------------------------------- sparse EF residual codec
+def sparsify_rows(rows: jax.Array, width: int
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """[C, n] f32 -> (idx [C, width] i32, val [C, width] f32, overflow).
+
+    The jit-side half of the population client-state store's
+    "topk_complement" residual layout: a pure-Top-K EF residual is nonzero
+    only on the coordinates the selection dropped, so nnz <= n - k and a
+    static ``width = n - k_min`` buffer holds it losslessly. A stable
+    argsort on the zero-flag packs the nonzero coordinates first (ascending
+    index order — deterministic), padding entries carry the zero values at
+    their own coordinates, so ``densify_rows`` scatter-adds them back as
+    exact no-ops. ``overflow`` is True iff some row has nnz > width — the
+    host asserts on it rather than silently truncating a residual.
+
+    Returns (idx i32, val f32, overflow bool scalar).
+    """
+    zero = rows == 0.0
+    order = jnp.argsort(zero, axis=1, stable=True)
+    idx = order[:, :width].astype(jnp.int32)
+    val = jnp.take_along_axis(rows, order[:, :width], axis=1)
+    overflow = jnp.any(jnp.sum(~zero, axis=1) > width)
+    return idx, val, overflow
+
+
+def densify_rows(idx: jax.Array, val: jax.Array, n: int) -> jax.Array:
+    """(idx [C, W] i32, val [C, W] f32) -> [C, n] f32 — inverse of
+    ``sparsify_rows``. Within a row the indices are a slice of a
+    permutation (all distinct), so the scatter-add reconstructs each stored
+    value exactly; padding entries add 0.0 at their own coordinate."""
+    c = idx.shape[0]
+    rows = jnp.zeros((c, n), val.dtype)
+    return rows.at[jnp.arange(c)[:, None], idx].add(val)
+
+
 # ----------------------------------------------------------- masked trainer
 def make_masked_local_trainer(loss_fn: Callable, lr: float):
     """``local_train(params, batches, step_mask) -> (delta, last_loss)``.
@@ -388,7 +423,8 @@ class SimScan:
 def make_sim_scan(loss_fn: Callable, params_template, *, lr: float,
                   acfg, eta: float = 1.0, with_overlap: bool = False,
                   make_batches: Optional[Callable] = None,
-                  plan_fn: Optional[Callable] = None) -> SimScan:
+                  plan_fn: Optional[Callable] = None,
+                  population: Optional[int] = None) -> SimScan:
     """Lower the ENTIRE multi-round FL simulation into one ``lax.scan``.
 
     Where ``round_step.make_round_step`` compiles one round and Python
@@ -439,12 +475,27 @@ def make_sim_scan(loss_fn: Callable, params_template, *, lr: float,
     (``simulation.run_fl_traced``) instead of arriving host-precomputed.
     When a traced plan omits "reset_ef", EF residuals are never reset (the
     traced stream has its own slot semantics).
+
+    ``population=P`` switches the carry contract to PER-CLIENT residual
+    semantics (the "pop_scan" engine — the dense reference for the sparse
+    out-of-core client store): ``residuals`` becomes a ``[P + 1, n]``
+    per-client matrix, the xs gain ``"cohort" [R, C] i32`` (slot -> client
+    id), and every round gathers the sampled clients' rows into the static
+    ``[C, n]`` slots, runs the unchanged round body, and scatters the
+    updated rows back. Row P is a sentinel: padded cohort slots point at it
+    and scatter back exactly what they gathered (zeros), so duplicate
+    sentinel writes are value-identical and the row provably stays zero.
+    ``reset_ef`` is ignored — per-client residuals survive cohort resizes
+    by construction, which is the point. Only meaningful for small P (the
+    dense carry is O(P x n)); the O(P x (n - k_min)) production path is
+    ``round_step.make_population_round_step`` + ``population.ClientStateStore``.
     """
     spec = spec_for(acfg)
     unflatten = make_unflatten(params_template)
     local_train = make_masked_local_trainer(loss_fn, lr)
     get_batches = make_batches or (lambda x: x["batches"])
     ef = spec.needs_residuals
+    per_client = population is not None
 
     def body(carry, x):
         flat, res, evals = carry
@@ -455,12 +506,21 @@ def make_sim_scan(loss_fn: Callable, params_template, *, lr: float,
         updates = flatten_client_trees(deltas)     # [C, n] f32
         active = p["active"]
 
-        res_in = res
-        if ef and "reset_ef" in p:
-            res_in = jnp.where(p["reset_ef"], jnp.zeros_like(res), res)
+        if ef and per_client:
+            res_in = res[x["cohort"]]              # [C, n] slot gather
+        else:
+            res_in = res
+            if ef and "reset_ef" in p:
+                res_in = jnp.where(p["reset_ef"], jnp.zeros_like(res), res)
         agg, new_res = aggregate_updates(
             spec, updates, p["weights"], p["ks"],
             residuals=res_in if ef else None, active=active)
+        if ef and per_client:
+            # scatter updated rows back to the per-client store; padded
+            # slots rewrite the sentinel row with what they read (zeros),
+            # so duplicate sentinel writes stay deterministic
+            rows = jnp.where(active[:, None], new_res, res_in)
+            new_res = res.at[x["cohort"]].set(rows)
         new_flat = flat - eta * agg
 
         # eval-round snapshot: O(E x n) carried buffer instead of emitting
@@ -492,9 +552,11 @@ def make_sim_scan(loss_fn: Callable, params_template, *, lr: float,
                 (updates, p["ks_overlap"], active))
         return (new_flat, new_res if ef else res, evals), ys
 
+    scan_kind = "pop_scan" if per_client else "sim_scan"
+
     def _sim(flat, residuals, evals, xs):
         # host side effect: runs only at trace time
-        TRACE_COUNTS[("sim_scan", spec.strategy, with_overlap)] += 1
+        TRACE_COUNTS[(scan_kind, spec.strategy, with_overlap)] += 1
         (flat, residuals, evals), ys = jax.lax.scan(
             body, (flat, residuals, evals), xs)
         return {"flat": flat, "residuals": residuals, "evals": evals,

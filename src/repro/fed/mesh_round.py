@@ -33,7 +33,9 @@ import jax.numpy as jnp
 
 from repro.core import compression as comp
 from repro.core import strategies as strat_mod
-from repro.fed.engine import compress_merge_leaf, make_masked_local_trainer
+from repro.fed.engine import (compress_merge_leaf, densify_rows,
+                              flatten_client_trees, make_masked_local_trainer,
+                              make_unflatten, sparsify_rows)
 
 #: retrace telemetry for the per-round mesh step: (strategy,) -> traces.
 #: The scanned driver's counter lives in engine.TRACE_COUNTS under
@@ -142,6 +144,90 @@ def make_mesh_round_step(loss_fn: Callable, *, lr_local: float = 1e-2,
                     active)
 
     return jax.jit(_step, donate_argnums=(0, 1) if donate else ())
+
+
+def mesh_residual_width(params_template, cr_min: float) -> int:
+    """Conservative sparse-pair width for the mesh population step: the
+    per-leaf Top-K keeps >= k_for_ratio_traced(leaf_n, cr) survivors per
+    leaf, so a client's whole-model residual nnz is at most
+    ``sum_l (leaf_n - k_l)`` at the plan's smallest cr. The traced k uses
+    f32 arithmetic where the host uses f64, so each leaf's bound is slacked
+    by one survivor — a few extra columns, never a silent overflow."""
+    import numpy as np
+    n_total, k_total = 0, 0
+    for leaf in jax.tree.leaves(params_template):
+        ln = int(np.prod(leaf.shape, dtype=np.int64))
+        n_total += ln
+        k_total += max(1, min(ln, int(np.floor(ln * cr_min)) - 1))
+    return max(1, n_total - k_total)
+
+
+def make_population_round_step(loss_fn: Callable, params_template, *,
+                               lr_local: float = 1e-2, eta: float = 1.0,
+                               strategy: str = "bcrs_opwa",
+                               gamma: float = 5.0, overlap_d: int = 1,
+                               use_kernel="auto", width: int = 0,
+                               donate: bool = True) -> Callable:
+    """Per-leaf population round: ``make_round_body`` with EF residuals
+    arriving in the client store's persisted wire layout instead of a
+    resident per-leaf carry pytree — the mesh twin of
+    ``round_step.make_population_round_step``.
+
+    Inside the jit the wire rows are densified to ``[C, n]``, split per
+    row into the per-leaf ``[C, *leaf]`` pytree the body compresses in
+    natural layout, then the updated residual pytree is re-flattened and
+    re-sparsified. One flat store serves any parameter pytree; the
+    conversion is O(C x n) compute with no new HBM-resident state (the
+    round body already materializes [C, *leaf] deltas of the same size).
+
+    Signature::
+
+        step(params, res_wire, batches, step_mask, coeffs, crs, active)
+          -> (new_params, new_res_wire, loss, overflow)
+
+    ``res_wire`` is ``(idx [C, W] i32, val [C, W] f32)`` for
+    "topk_complement" strategies (``width`` from ``mesh_residual_width``),
+    a dense ``[C, n]`` f32 matrix for "dense"-layout EF strategies, and a
+    ``[0]`` placeholder for carry="none" (passed through).
+    """
+    strat = strat_mod.get(strategy)
+    ef = strat.needs_residuals
+    layout = strat.residual_layout if ef else None
+    if layout == "topk_complement" and width <= 0:
+        raise ValueError(f"{strategy}: topk_complement wire layout needs "
+                         "width > 0 (use mesh_residual_width)")
+    body = make_round_body(loss_fn, lr_local=lr_local, eta=eta,
+                           strategy=strategy, gamma=gamma,
+                           overlap_d=overlap_d, use_kernel=use_kernel)
+    res_template = jax.tree.map(
+        lambda l: jnp.zeros(l.shape, jnp.float32), params_template)
+    unflatten_row = make_unflatten(res_template)
+    import numpy as np
+    n_total = int(sum(np.prod(l.shape, dtype=np.int64)
+                      for l in jax.tree.leaves(params_template)))
+
+    def _step(params, res_wire, batches, step_mask, coeffs, crs, active):
+        TRACE_COUNTS[("population", strategy)] += 1   # trace time only
+        if layout == "topk_complement":
+            rows = densify_rows(*res_wire, n_total)
+        else:
+            rows = res_wire
+        res_tree = (jax.vmap(unflatten_row)(rows) if ef else None)
+        new_params, new_res_tree, loss = body(
+            params, res_tree, batches, step_mask, coeffs, crs, active)
+        overflow = jnp.asarray(False)
+        if layout == "topk_complement":
+            idx, val, overflow = sparsify_rows(
+                flatten_client_trees(new_res_tree), width)
+            new_wire = (idx, val)
+        elif ef:
+            new_wire = flatten_client_trees(new_res_tree)
+        else:
+            new_wire = res_wire
+        return new_params, new_wire, loss, overflow
+
+    donate_nums = ((0, 1) if ef else (0,)) if donate else ()
+    return jax.jit(_step, donate_argnums=donate_nums)
 
 
 def make_fl_round_step(model, *, lr_local: float = 1e-2, eta: float = 1.0,

@@ -112,3 +112,118 @@ def make_round_step(loss_fn: Callable, params_template, *, lr: float,
     donate = (0, 1) if spec.needs_residuals else (0,)
     fn = jax.jit(_step, donate_argnums=donate)
     return FusedRoundStep(fn, strategy, with_overlap)
+
+
+# -------------------------------------------- population slot-gather round
+class PopulationRoundStep:
+    """Callable wrapper around the jitted population round: the slot-gather
+    adapter between a ``population.ClientStateStore`` and the unchanged
+    compress/EF/merge substrate. Residual I/O happens in the store's wire
+    layout (sparse ``(idx, val)`` pairs for "topk_complement", full rows
+    for "dense"), densified/sparsified INSIDE the jit boundary — the host
+    never materializes a ``[P, n]`` (or even a second ``[C, n]``) buffer."""
+
+    def __init__(self, fn, spec, layout, width):
+        self._fn = fn
+        self.spec = spec
+        self.strategy = spec.strategy
+        self.layout = layout       # None when the strategy carries no EF
+        self.width = width         # sparse pair width (topk_complement only)
+
+    def __call__(self, flat, residuals, x):
+        return self._fn(flat, residuals, x)
+
+    def init_residuals(self, cohort: int, n: int):
+        """Zero residual buffers in this step's wire layout (what a client
+        that never participated gathers from the store)."""
+        if self.layout is None:
+            return jnp.zeros((0,), jnp.float32)
+        if self.layout == "topk_complement":
+            return (jnp.zeros((cohort, self.width), jnp.int32),
+                    jnp.zeros((cohort, self.width), jnp.float32))
+        return jnp.zeros((cohort, n), jnp.float32)
+
+
+def make_population_round_step(loss_fn: Callable, params_template, *,
+                               lr: float, acfg: agg_mod.AggregationConfig,
+                               eta: float = 1.0, width: int = 0,
+                               make_batches: Callable = None
+                               ) -> PopulationRoundStep:
+    """Build the population (streaming-cohort) round program.
+
+    The round body is the fused step's, but EF residuals arrive in the
+    client store's persisted layout and leave the same way — gather input /
+    scatter output instead of a resident donated carry:
+
+        step(flat [n] f32,                        # donated
+             residuals,                           # donated; layout-typed:
+                                                  #  topk_complement:
+                                                  #    (idx [C, W] i32,
+                                                  #     val [C, W] f32)
+                                                  #  dense: [C, n] f32
+                                                  #  carry="none": [0] f32
+             x: {"step_mask" [C, S] bool,
+                 "active"    [C]    bool,         # padded cohort slots
+                 "weights"   [C]    f32,          # 0 at inactive slots
+                 "ks"        [C]    i32,
+                 + whatever ``make_batches`` consumes (default "batches",
+                   a pytree of [C, S, ...] stacked client batches)})
+        -> {"flat", "residuals" (same layout), "loss", "overflow"}
+
+    ``width`` is the static sparse-pair width for "topk_complement"
+    strategies — ``population.residual_width`` derives it from the whole
+    plan's minimum retained count (nnz <= n - k_min, ties only shrink it).
+    ``overflow`` (bool scalar) is True iff a row's residual outgrew the
+    width; callers assert on it rather than silently truncating EF state.
+    Inactive slots round-trip their residuals unchanged (same ``active``
+    semantics as ``aggregate_updates``), so the host can scatter only the
+    real cohort prefix back to the store.
+    """
+    spec = engine.spec_for(acfg)
+    strategy = spec.strategy
+    strat = spec.strat
+    unflatten = engine.make_unflatten(params_template)
+    local_train = engine.make_masked_local_trainer(loss_fn, lr)
+    get_batches = make_batches or (lambda x: x["batches"])
+    ef = spec.needs_residuals
+    layout = strat.residual_layout if ef else None
+    if layout == "topk_complement" and width <= 0:
+        raise ValueError(
+            f"{strategy} persists residuals as topk_complement pairs — "
+            "make_population_round_step needs width > 0 (n - k_min)")
+
+    def _step(flat, residuals, x):
+        # host side effect: runs only at trace time
+        TRACE_COUNTS[("population", strategy)] += 1
+
+        params = unflatten(flat)
+        deltas, losses = jax.vmap(local_train, in_axes=(None, 0, 0))(
+            params, get_batches(x), x["step_mask"])
+        updates = engine.flatten_client_trees(deltas)   # [C, n] f32
+        active = x["active"]
+        n = updates.shape[1]
+
+        if layout == "topk_complement":
+            res_rows = engine.densify_rows(*residuals, n)
+        else:
+            res_rows = residuals if ef else None
+        agg, new_rows = engine.aggregate_updates(
+            spec, updates, x["weights"], x["ks"],
+            residuals=res_rows, active=active)
+
+        n_act = jnp.maximum(jnp.sum(active.astype(jnp.int32)), 1)
+        out = {"flat": flat - eta * agg,
+               "loss": jnp.sum(jnp.where(active, losses, 0.0)) / n_act,
+               "overflow": jnp.asarray(False)}
+        if layout == "topk_complement":
+            idx, val, overflow = engine.sparsify_rows(new_rows, width)
+            out["residuals"] = (idx, val)
+            out["overflow"] = overflow
+        elif ef:
+            out["residuals"] = new_rows
+        else:
+            out["residuals"] = residuals
+        return out
+
+    fn = jax.jit(_step, donate_argnums=(0, 1) if ef else (0,))
+    return PopulationRoundStep(fn, spec, layout, width)

@@ -208,10 +208,24 @@ def cohort_slots(n_clients: int, participation: float) -> int:
     return max(1, int(round(n_clients * participation)))
 
 
+def _link_columns(links, ids) -> Tuple[np.ndarray, np.ndarray]:
+    """(bandwidth_bps, latency_s) float64 columns for the given client ids —
+    an O(C) slice when ``links`` is a ``cost_model.LinkArrays`` (population
+    scale), an O(C) comprehension over ``ClientLink`` objects otherwise.
+    Either way the values are identical, so downstream vectorized math is
+    bit-exact with the legacy per-object loops."""
+    if isinstance(links, cost_model.LinkArrays):
+        return links.bandwidth_bps[ids], links.latency_s[ids]
+    return (np.array([links[c].bandwidth_bps for c in ids], np.float64),
+            np.array([links[c].latency_s for c in ids], np.float64))
+
+
 def plan_cohort(rnd: int, rng, *, n_clients: int, participation: float,
                 fracs_all, links, v_bytes, acfg,
                 failure: Optional[FailureInjector] = None,
-                straggler: Optional[StragglerPolicy] = None):
+                straggler: Optional[StragglerPolicy] = None,
+                cohort: Optional[int] = None,
+                sparse_failures: bool = False):
     """One round's cohort: selection -> failure survivors -> straggler
     arrivals -> renormalized weights. Shared by ALL engines — the three
     simulation engines AND the real-model mesh driver
@@ -219,23 +233,37 @@ def plan_cohort(rnd: int, rng, *, n_clients: int, participation: float,
     implementation; within the simulation harness the host rng stream is
     consumed in exactly this order everywhere, which is what makes
     legacy/fused/scan trajectories comparable. Returns (selected, fr) or
-    None when the whole cohort died (the round is skipped)."""
-    n_sel = cohort_slots(n_clients, participation)
+    None when the whole cohort died (the round is skipped).
+
+    Population scale: pass ``cohort`` to fix the target size directly
+    (instead of ``round(P * participation)`` — at P = 10^6 the cohort is an
+    absolute budget, not a fraction) and ``sparse_failures=True`` to draw
+    survivors per sampled id (``FailureInjector.survivors_at``, O(C)) rather
+    than the dense ``[P]`` vector — its own seeded stream, and it revives a
+    cohort member when all die, so the round is never skipped."""
+    n_sel = cohort if cohort is not None \
+        else cohort_slots(n_clients, participation)
     n_draw = over_select(n_sel, straggler) if straggler is not None else n_sel
     n_draw = min(n_draw, n_clients)
     selected = rng.choice(n_clients, n_draw, replace=False)
     if failure is not None:
-        alive = failure.survivors(rnd, n_clients)
-        selected = np.array([c for c in selected if alive[c]])
+        if sparse_failures:
+            selected = selected[failure.survivors_at(rnd, selected)]
+        else:
+            alive = failure.survivors(rnd, n_clients)
+            selected = selected[alive[selected]]
         if len(selected) == 0:
             return None
     if straggler is not None and len(selected) > n_sel:
         # completion times from the paper cost model at the configured CR,
         # priced through the strategy's declared wire format (dense -> 1.0,
-        # the legacy fedavg convention; packed formats scale honestly)
+        # the legacy fedavg convention; packed formats scale honestly).
+        # Vectorized over the cohort (comm_time_batch is elementwise
+        # bit-identical to the scalar loop) — O(C) numpy, no per-client
+        # Python at any population size
         cr_eff = acfg.strat.wire.cr_eff(acfg.cr, int(v_bytes // 4))
-        t = np.array([bcrs_mod.comm_time(v_bytes, links[c], cr_eff)
-                      for c in selected])
+        bw, lat = _link_columns(links, selected)
+        t = bcrs_mod.comm_time_batch(v_bytes, bw, lat, cr_eff)
         chosen, _ = arrivals(t, n_sel, straggler)
         selected = selected[chosen]
     fr = fracs_all[selected]
@@ -310,11 +338,19 @@ def run_fl(sim: FLSimConfig, acfg: agg_mod.AggregationConfig,
            engine: Optional[str] = None,
            straggler: Optional[StragglerPolicy] = None) -> FLSimResult:
     """Run the simulation. ``engine`` selects the round engine
-    ("legacy" | "fused" | "scan"); when None it falls back to the legacy
-    ``fused`` bool ("fused" / "legacy")."""
+    ("legacy" | "fused" | "scan" | "pop_scan" | "population"); when None it
+    falls back to the legacy ``fused`` bool ("fused" / "legacy").
+
+    The two population engines treat ``sim.n_clients`` as the registered
+    population P and carry EF residuals PER CLIENT (state survives cohort
+    resizes — no reset-on-resize): "pop_scan" keeps them in a dense
+    ``[P + 1, n]`` scan carry (the small-P reference), "population" streams
+    each round's cohort through a sparse out-of-core
+    ``population.ClientStateStore`` (round state O(C x n + P x (n - k_min)),
+    bit-exact with pop_scan)."""
     if engine is None:
         engine = "fused" if fused else "legacy"
-    if engine not in ("legacy", "fused", "scan"):
+    if engine not in ("legacy", "fused", "scan", "pop_scan", "population"):
         raise ValueError(f"unknown engine {engine!r}")
     (rng, clients, parts, fracs_all,
      (x_train, y_train, x_test, y_test), server) = _setup_sim(sim, acfg)
@@ -322,10 +358,20 @@ def run_fl(sim: FLSimConfig, acfg: agg_mod.AggregationConfig,
     steps_by_client = _steps_by_client(clients, sim)
     s_max = int(steps_by_client.max())
 
-    if engine == "scan":
+    if engine in ("scan", "pop_scan"):
         return _run_scan(sim, acfg, rng, clients, parts, fracs_all, links,
                          server, steps_by_client, s_max, x_train, y_train,
-                         x_test, y_test, failure, straggler, collect_overlap)
+                         x_test, y_test, failure, straggler, collect_overlap,
+                         per_client_ef=(engine == "pop_scan"))
+    if engine == "population":
+        if collect_overlap:
+            raise ValueError("the population engine does not carry the "
+                             "Fig. 4 overlap instrumentation — use "
+                             "engine='scan' or 'pop_scan'")
+        return _run_population(sim, acfg, rng, clients, parts, fracs_all,
+                               links, server, steps_by_client, s_max,
+                               x_train, y_train, x_test, y_test, failure,
+                               straggler)
 
     if engine == "fused":
         server.init_fused(mlp_loss, sim.lr, collect_overlap=collect_overlap)
@@ -416,20 +462,21 @@ def run_fl(sim: FLSimConfig, acfg: agg_mod.AggregationConfig,
     return result
 
 
-# -------------------------------------------------------------- scan engine
-def _run_scan(sim, acfg, rng, clients, parts, fracs_all, links, server,
-              steps_by_client, s_max, x_train, y_train, x_test, y_test,
-              failure, straggler, collect_overlap) -> FLSimResult:
-    """Whole-simulation ``lax.scan`` engine: precompute every round's plan on
-    host (same rng stream as the fused loop), stack the schedules + batch
-    sample indices as scan xs, run ONE jitted program, then evaluate the
-    returned per-round model trajectory."""
-    n_sel = cohort_slots(sim.n_clients, sim.participation)
+# ------------------------------------------------------- shared round plans
+def _plan_rounds(sim, acfg, rng, clients, parts, fracs_all, links, server,
+                 steps_by_client, s_max, failure, straggler,
+                 collect_overlap) -> list:
+    """Precompute every executed round's plan on the host (ONE rng stream,
+    consumed in exactly the order the fused loop does): cohort -> BCRS
+    schedule -> retained counts -> batch sample indices, with comm time
+    accounted into ``server.times`` as it goes. Shared verbatim by the scan
+    engine and both population engines, so their trajectories and comm
+    accounting are identical by construction.
+
+    Returns [(rnd, selected, weights, ks, ks_overlap, idx)]."""
     n_params, v_bytes = server.n_params, server.v_bytes
     bs = sim.batch_size
-    ef = acfg.strat.needs_residuals
-
-    plans = []          # (rnd, selected, weights, ks, ks_overlap, idx)
+    plans = []
     for rnd in range(sim.rounds):
         plan = _plan_cohort(rnd, rng, sim, fracs_all, links, v_bytes, acfg,
                             failure, straggler)
@@ -453,7 +500,33 @@ def _run_scan(sim, acfg, rng, clients, parts, fracs_all, links, server,
             idx[j, : steps * bs] = parts[c][local]
         server._account_time(dict(info), links_sel)
         plans.append((rnd, selected, weights, ks, ks_overlap, idx))
+    return plans
 
+
+# -------------------------------------------------------------- scan engine
+def _run_scan(sim, acfg, rng, clients, parts, fracs_all, links, server,
+              steps_by_client, s_max, x_train, y_train, x_test, y_test,
+              failure, straggler, collect_overlap,
+              per_client_ef: bool = False) -> FLSimResult:
+    """Whole-simulation ``lax.scan`` engine: precompute every round's plan on
+    host (same rng stream as the fused loop), stack the schedules + batch
+    sample indices as scan xs, run ONE jitted program, then evaluate the
+    returned per-round model trajectory.
+
+    ``per_client_ef`` switches to the "pop_scan" carry contract: EF
+    residuals live in a dense ``[P + 1, n]`` PER-CLIENT matrix (row P is the
+    padded-slot sentinel) that every round slot-gathers/scatters by the
+    cohort ids — the bit-exact dense reference for the sparse out-of-core
+    client store, and the first engine whose EF state survives cohort
+    resizes (no ``reset_ef``)."""
+    n_sel = cohort_slots(sim.n_clients, sim.participation)
+    n_params, v_bytes = server.n_params, server.v_bytes
+    bs = sim.batch_size
+    ef = acfg.strat.needs_residuals
+
+    plans = _plan_rounds(sim, acfg, rng, clients, parts, fracs_all, links,
+                         server, steps_by_client, s_max, failure, straggler,
+                         collect_overlap)
     result = FLSimResult()
     if not plans:
         result.times = server.times
@@ -468,8 +541,11 @@ def _run_scan(sim, acfg, rng, clients, parts, fracs_all, links, server,
         "weights": np.zeros((r_exec, c_max), np.float32),
         "ks": np.ones((r_exec, c_max), np.int32),
     }
-    if ef:
+    if ef and not per_client_ef:
         xs["reset_ef"] = np.zeros((r_exec,), bool)
+    if ef and per_client_ef:
+        # slot -> client id; padded slots point at the sentinel row P
+        xs["cohort"] = np.full((r_exec, c_max), sim.n_clients, np.int32)
     if collect_overlap:
         xs["ks_overlap"] = np.ones((r_exec, c_max), np.int32)
         xs["overlap_round"] = np.zeros((r_exec,), bool)
@@ -487,7 +563,9 @@ def _run_scan(sim, acfg, rng, clients, parts, fracs_all, links, server,
         xs["active"][i, :c_r] = True
         xs["weights"][i, :c_r] = weights
         xs["ks"][i, :c_r] = ks
-        if ef:
+        if ef and per_client_ef:
+            xs["cohort"][i, :c_r] = selected
+        elif ef:
             # mirrors FLServer.round_fused: residuals reset whenever the
             # cohort size changes between consecutive EXECUTED rounds
             xs["reset_ef"][i] = prev_c is not None and c_r != prev_c
@@ -505,8 +583,10 @@ def _run_scan(sim, acfg, rng, clients, parts, fracs_all, links, server,
 
     sim_fn = engine_mod.make_sim_scan(
         mlp_loss, server.params, lr=sim.lr, acfg=acfg, eta=server.eta,
-        with_overlap=collect_overlap, make_batches=gather_batches)
-    residuals0 = (jnp.zeros((c_max, n_params), jnp.float32) if ef
+        with_overlap=collect_overlap, make_batches=gather_batches,
+        population=sim.n_clients if per_client_ef else None)
+    res_rows = (sim.n_clients + 1) if per_client_ef else c_max
+    residuals0 = (jnp.zeros((res_rows, n_params), jnp.float32) if ef
                   else jnp.zeros((0,), jnp.float32))
     evals0 = jnp.zeros((max(n_evals, 1), n_params), jnp.float32)
     xs_dev = {k: jnp.asarray(v) for k, v in xs.items()}
@@ -534,7 +614,12 @@ def _run_scan(sim, acfg, rng, clients, parts, fracs_all, links, server,
     result.times = server.times
     result.final_accuracy = (result.accuracies[-1][1]
                              if result.accuracies else 0.0)
-    if ef:
+    if ef and per_client_ef:
+        # PER-CLIENT matrix [P, n] (sentinel row dropped) — the dense
+        # reference the sparse client store is parity-tested against
+        result.final_residuals = np.asarray(
+            out["residuals"][: sim.n_clients])
+    elif ef:
         c_last = len(plans[-1][1])
         server._residuals = out["residuals"][:c_last]
         result.final_residuals = np.asarray(server._residuals)
@@ -543,6 +628,113 @@ def _run_scan(sim, acfg, rng, clients, parts, fracs_all, links, server,
             if rnd == sim.rounds // 2:
                 result.overlap_hist = _overlap_hist(
                     out["ys"]["overlap_counts"][i], len(selected))
+    return result
+
+
+# -------------------------------------------------------- population engine
+def _run_population(sim, acfg, rng, clients, parts, fracs_all, links, server,
+                    steps_by_client, s_max, x_train, y_train, x_test, y_test,
+                    failure, straggler) -> FLSimResult:
+    """Streaming-cohort engine over the sparse out-of-core client store:
+    the same host plan as the scan engines (ONE rng stream), but each round
+    is a single jitted program whose EF residuals arrive from / return to a
+    ``population.ClientStateStore`` in the strategy's declared layout
+    (densify-on-gather / sparsify-on-scatter inside the jit). Round state is
+    O(C x n) device + O(P x width) host (chunked, spillable) — never
+    ``[P, n]`` dense. Bit-exact with ``engine="pop_scan"`` (asserted in
+    tests/test_population.py): same plans, same batch gathers, same
+    aggregation arithmetic, lossless residual round-trips."""
+    from repro.fed import population as pop_mod
+    from repro.fed import round_step as rs_mod
+
+    n_sel = cohort_slots(sim.n_clients, sim.participation)
+    n_params, v_bytes = server.n_params, server.v_bytes
+    bs = sim.batch_size
+    strat = acfg.strat
+    ef = strat.needs_residuals
+
+    plans = _plan_rounds(sim, acfg, rng, clients, parts, fracs_all, links,
+                         server, steps_by_client, s_max, failure, straggler,
+                         False)
+    result = FLSimResult()
+    if not plans:
+        result.times = server.times
+        return result
+
+    x_all, y_all = jnp.asarray(x_train), jnp.asarray(y_train)
+
+    def gather_batches(x):
+        idx = x["sample_idx"]
+        return {"x": x_all[idx], "y": y_all[idx]}
+
+    width = 0
+    if ef and strat.residual_layout == "topk_complement":
+        width = pop_mod.residual_width(
+            n_params, min(int(np.min(p[3])) for p in plans))
+    step = rs_mod.make_population_round_step(
+        mlp_loss, server.params, lr=sim.lr, acfg=acfg, eta=server.eta,
+        width=width, make_batches=gather_batches)
+    store = None
+    if ef:
+        store = pop_mod.ClientStateStore(
+            sim.n_clients, n_params, layout=strat.residual_layout,
+            width=max(width, 1),
+            chunk_clients=min(256, sim.n_clients))
+
+    flat = server._flat
+    res_dev = step.init_residuals(n_sel, n_params)
+    xt, yt = jnp.asarray(x_test), jnp.asarray(y_test)
+    for rnd, selected, weights, ks, _ks_overlap, idx in plans:
+        t0 = time.perf_counter()
+        c_r = len(selected)
+        x = {"sample_idx": np.zeros((n_sel, s_max, bs), np.int32),
+             "step_mask": np.zeros((n_sel, s_max), bool),
+             "active": np.zeros((n_sel,), bool),
+             "weights": np.zeros((n_sel,), np.float32),
+             "ks": np.ones((n_sel,), np.int32)}
+        x["sample_idx"][:c_r] = idx.reshape(c_r, s_max, bs)
+        for j, c in enumerate(selected):
+            x["step_mask"][j, : int(steps_by_client[c])] = True
+        x["active"][:c_r] = True
+        x["weights"][:c_r] = weights
+        x["ks"][:c_r] = ks
+        x = {k: jnp.asarray(v) for k, v in x.items()}
+        if ef:
+            # pad the gathered cohort rows to the static slot count; the
+            # jit's `active` mask round-trips the zero padding untouched
+            bufs = []
+            for g in store.gather(selected):
+                buf = np.zeros((n_sel,) + g.shape[1:], g.dtype)
+                buf[:c_r] = g
+                bufs.append(jnp.asarray(buf))
+            res_dev = (tuple(bufs) if step.layout == "topk_complement"
+                       else bufs[0])
+        out = step(flat, res_dev, x)
+        flat = out["flat"]
+        if ef:
+            if bool(out["overflow"]):
+                raise RuntimeError(
+                    f"round {rnd}: EF residual outgrew sparse width "
+                    f"{step.width}")
+            res_dev = out["residuals"]
+            new = (res_dev if isinstance(res_dev, tuple) else (res_dev,))
+            store.scatter(selected,
+                          tuple(np.asarray(a)[:c_r] for a in new))
+        result.wall_per_round.append(time.perf_counter() - t0)
+        result.executed_rounds.append(rnd)
+        if _is_eval_round(sim, rnd):
+            acc = float(mlp_accuracy(server._unravel(flat), xt, yt))
+            result.accuracies.append((rnd, acc))
+
+    server._flat = flat
+    server.params = server._unravel(flat)
+    result.times = server.times
+    result.final_accuracy = (result.accuracies[-1][1]
+                             if result.accuracies else 0.0)
+    if ef:
+        # PER-CLIENT [P, n] dense view (parity with pop_scan); small-P
+        # engine — the large-P entry point is population.run_population_rounds
+        result.final_residuals = store.dump_dense()
     return result
 
 

@@ -48,6 +48,29 @@ class FailureInjector:
             alive[int(rng.integers(n_clients))] = True
         return alive
 
+    def survivors_at(self, round_idx: int, ids: np.ndarray) -> np.ndarray:
+        """Population-scale survivor draw: per-client Bernoulli keyed on
+        (seed, round, client id), computed ONLY for the sampled cohort —
+        O(C) regardless of the registered population (``survivors`` draws
+        the full ``[P]`` vector, a per-round O(P) bill that defeats
+        streaming cohorts at P = 10^6). Its OWN deterministic stream, not
+        bit-parity with ``survivors`` — drivers pick one convention and
+        keep it (the simulation engines keep the dense draw so their seeded
+        trajectories stay comparable). The never-lose-everyone revive is
+        applied over the cohort: if every sampled client dies, the first
+        one is revived."""
+        ids = np.asarray(ids)
+        u = np.array([np.random.default_rng(
+            (self.seed, round_idx, int(c))).random() for c in ids])
+        alive = u >= self.p_fail
+        if self.scheduled:
+            for r, c in self.scheduled:
+                if r == round_idx:
+                    alive[ids == c] = False
+        if not alive.any():
+            alive[0] = True
+        return alive
+
 
 @dataclass
 class ElasticPool:

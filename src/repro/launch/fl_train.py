@@ -27,6 +27,7 @@ including the EF residual state).
 from __future__ import annotations
 
 import argparse
+import os
 import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional
@@ -42,9 +43,11 @@ from repro.core import cost_model
 from repro.core import strategies as strat_mod
 from repro.core.aggregation import AggregationConfig
 from repro.data import synthetic_lm_tokens
+from repro.fed import mesh_round as mesh_mod
+from repro.fed import population as pop_mod
 from repro.fed import engine as engine_mod
 from repro.fed.mesh_round import make_mesh_round_step
-from repro.fed.simulation import cohort_slots, plan_cohort
+from repro.fed.simulation import _link_columns, cohort_slots, plan_cohort
 from repro.ft import FailureInjector, StragglerPolicy
 from repro.models import Model
 
@@ -80,12 +83,35 @@ class FLTrainConfig:
     checkpoint_dir: str = ""
     checkpoint_every: int = 0    # rounds per scan chunk; 0 = auto-capped
     engine: str = "scan"         # "scan" | "round"
+    population: int = 0          # > 0: streaming-cohort mode over P clients
+    cohort: int = 0              # cohort slots C (population mode; 0 ->
+                                 # --clients is reused as the cohort size)
     use_kernel: object = "auto"
     seed: int = 0
     verbose: bool = True
 
     def __post_init__(self):
         strat_mod.get(self.strategy)   # config-time error, names listed
+        if self.population > 0:
+            if self.cohort <= 0:
+                self.cohort = self.clients
+            if self.cohort > self.population:
+                raise ValueError(
+                    f"cohort {self.cohort} exceeds population "
+                    f"{self.population}")
+
+    @property
+    def n_registered(self) -> int:
+        """Registered client count: the population in streaming mode, the
+        (dense-state) client count otherwise."""
+        return self.population if self.population > 0 else self.clients
+
+    @property
+    def c_slots(self) -> int:
+        """Static cohort slot count every padded plan array is sized with."""
+        if self.population > 0:
+            return self.cohort
+        return cohort_slots(self.clients, self.participation)
 
 
 @dataclass
@@ -114,14 +140,24 @@ def _build_plan(cfg: FLTrainConfig, rng, fracs_all, links, v_bytes,
     invariant because the whole plan is rebuilt identically at startup),
     then the BCRS schedule for ALL rounds in one vectorized
     ``make_schedule_batch`` call (the per-round ``make_schedule`` this
-    replaces was loop-invariant whenever the cohort was)."""
-    c_max = cohort_slots(cfg.clients, cfg.participation)
+    replaces was loop-invariant whenever the cohort was).
+
+    In population mode the same plan shape comes out, but every per-round
+    quantity is O(C): the cohort is an absolute budget (``cfg.cohort``
+    passed through ``plan_cohort``'s ``cohort=`` override), failure
+    survivors are drawn per sampled id (``sparse_failures``), and the link
+    columns are O(C) ``LinkArrays`` slices — the whole-run plan is
+    O(rounds x C) regardless of P."""
+    pop_mode = cfg.population > 0
+    c_max = cfg.c_slots
     plans = []
     for rnd in range(cfg.rounds):
-        p = plan_cohort(rnd, rng, n_clients=cfg.clients,
+        p = plan_cohort(rnd, rng, n_clients=cfg.n_registered,
                         participation=cfg.participation, fracs_all=fracs_all,
                         links=links, v_bytes=v_bytes, acfg=acfg,
-                        failure=failure, straggler=straggler)
+                        failure=failure, straggler=straggler,
+                        cohort=cfg.cohort if pop_mode else None,
+                        sparse_failures=pop_mode)
         if p is not None:
             plans.append((rnd, *p))
     t = len(plans)
@@ -137,8 +173,7 @@ def _build_plan(cfg: FLTrainConfig, rng, fracs_all, links, v_bytes,
         selected[i, :c_r] = sel
         active[i, :c_r] = True
         fr_pad[i, :c_r] = fr
-        bw[i, :c_r] = [links[c].bandwidth_bps for c in sel]
-        lat[i, :c_r] = [links[c].latency_s for c in sel]
+        bw[i, :c_r], lat[i, :c_r] = _link_columns(links, sel)
 
     strat = strat_mod.get(cfg.strategy)
     if strat.weighting == "bcrs":
@@ -189,7 +224,7 @@ def run(cfg: FLTrainConfig) -> dict:
     params = model.init(jax.random.PRNGKey(cfg.seed))
     n_flat = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
     v_bytes = 4.0 * n_flat
-    c_max = cohort_slots(cfg.clients, cfg.participation)
+    c_max = cfg.c_slots
     strat = strat_mod.get(cfg.strategy)
     ef = strat.needs_residuals
 
@@ -197,8 +232,13 @@ def run(cfg: FLTrainConfig) -> dict:
                              alpha=cfg.alpha, gamma=cfg.gamma,
                              overlap_d=cfg.overlap_d,
                              use_kernel=cfg.use_kernel)
-    links = cost_model.sample_links(cfg.clients, rng)
-    fracs_all = np.full(cfg.clients, 1.0 / cfg.clients)
+    if cfg.population > 0:
+        # registry columns, not P Python objects: every per-round read
+        # downstream is an O(C) slice
+        links = cost_model.sample_link_arrays(cfg.population, rng)
+    else:
+        links = cost_model.sample_links(cfg.clients, rng)
+    fracs_all = np.full(cfg.n_registered, 1.0 / cfg.n_registered)
     failure = (FailureInjector(p_fail=cfg.fail_prob, seed=cfg.seed)
                if cfg.fail_prob > 0 else None)
     straggler = (StragglerPolicy(over_selection=cfg.over_selection)
@@ -206,6 +246,9 @@ def run(cfg: FLTrainConfig) -> dict:
     plan = _build_plan(cfg, rng, fracs_all, links, v_bytes, acfg,
                        failure, straggler)
     times = cost_model.TimeAccumulator()
+    if cfg.population > 0:
+        return _run_population(cfg, model, model_cfg, params, plan, links,
+                               strat, n_flat, v_bytes, times)
 
     residuals = (engine_mod.init_mesh_residuals(params, c_max) if ef
                  else jnp.zeros((0,), jnp.float32))
@@ -329,6 +372,140 @@ def run(cfg: FLTrainConfig) -> dict:
             "times": times, "resumed_from": resumed_from}
 
 
+def _run_population(cfg: FLTrainConfig, model, model_cfg, params, plan,
+                    links, strat, n_flat: int, v_bytes: float,
+                    times) -> dict:
+    """Streaming-cohort training over a population far larger than the
+    cohort: per-client EF residuals live in a ``population.ClientStateStore``
+    (sparse ``(idx32, f32)`` pairs for "topk_complement" strategies, chunked
+    rows for "dense" ones) instead of a device-resident per-slot carry, and
+    each round gathers just the sampled cohort's rows into the ONE compiled
+    ``mesh_round.make_population_round_step`` program, scattering the
+    updated rows back afterwards. Round state is O(C x n + touched-chunks),
+    never O(P x n).
+
+    Checkpoints persist ``{"params"}`` plus a per-step client-store snapshot
+    (``clients_step_<N>/`` next to ``step_<N>.msgpack``, pruned in lockstep
+    with the main retention), so a resumed run is bit-exact with an
+    uninterrupted one including every client's residual."""
+    ef = strat.needs_residuals
+    layout = strat.residual_layout if ef else None
+    c_max = cfg.c_slots
+    if layout == "topk_complement":
+        # every retained count the plan can emit bounds the residual nnz
+        cr_min = (float(plan.crs[plan.active].min())
+                  if plan.active.any() else cfg.cr)
+        width = mesh_mod.mesh_residual_width(params, cr_min)
+    else:
+        width = 0
+
+    store: Optional[pop_mod.ClientStateStore] = None
+    start, resumed_from = 0, None
+    if cfg.checkpoint_dir and ckpt.latest_step(cfg.checkpoint_dir) is not None:
+        tree, start, extra = ckpt.restore(cfg.checkpoint_dir,
+                                          {"params": params}, strict=False)
+        params = tree["params"]
+        man = (extra or {}).get("client_store")
+        if ef and man is not None:
+            if layout == "topk_complement" and man["width"] != width:
+                raise ValueError(
+                    f"client-store snapshot has sparse width {man['width']} "
+                    f"but the rebuilt plan needs {width} — the plan (rounds/"
+                    "cr/seed) changed across the restart")
+            store = pop_mod.ClientStateStore.restore(
+                cfg.checkpoint_dir, start, man,
+                spill_dir=os.path.join(cfg.checkpoint_dir, "client_spill"))
+        resumed_from = start
+        if cfg.verbose:
+            print(f"[fl] resumed from round {start} "
+                  f"(population {cfg.population})")
+    if ef and store is None:
+        store = pop_mod.ClientStateStore(
+            cfg.population, n_flat, layout=layout, width=width,
+            chunk_clients=min(4096, cfg.population))
+
+    step = mesh_mod.make_population_round_step(
+        model.loss_fn, params, lr_local=cfg.lr, eta=cfg.eta,
+        strategy=cfg.strategy, gamma=cfg.gamma, overlap_d=cfg.overlap_d,
+        use_kernel=cfg.use_kernel, width=width)
+
+    def save(next_round: int) -> None:
+        if not cfg.checkpoint_dir:
+            return
+        extra = {"arch": cfg.arch, "strategy": cfg.strategy,
+                 "population": cfg.population}
+        if store is not None:
+            extra["client_store"] = store.save(cfg.checkpoint_dir,
+                                               next_round)
+        ckpt.save(cfg.checkpoint_dir, next_round, {"params": params},
+                  extra=extra)
+        if store is not None:
+            # retention just ran on the step files; drop the client
+            # snapshots whose step it pruned
+            pop_mod.prune_client_snapshots(
+                cfg.checkpoint_dir, ckpt.list_steps(cfg.checkpoint_dir))
+
+    todo = [i for i, rnd in enumerate(plan.rounds) if rnd >= start]
+    if cfg.checkpoint_every > 0:
+        chunk = cfg.checkpoint_every
+    elif cfg.checkpoint_dir:
+        chunk = DEFAULT_CHECKPOINT_EVERY
+    else:
+        chunk = max(len(todo), 1)
+    losses: List[float] = []
+    wall_per_round: List[float] = []
+    zero_wire = jnp.zeros((0,), jnp.float32)   # carry="none" placeholder
+    for pos, i in enumerate(todo):
+        sel = plan.selected[i][plan.active[i]]
+        c_r = len(sel)
+        batches = {k: jnp.asarray(v) for k, v in _round_batches(
+            cfg, model_cfg.vocab_size, plan.rounds[i], c_max).items()}
+        if ef:
+            gathered = store.gather(sel)
+            bufs = []
+            for a in gathered:      # zero-pad the cohort to the static slots
+                buf = np.zeros((c_max,) + a.shape[1:], a.dtype)
+                buf[:c_r] = a
+                bufs.append(jnp.asarray(buf))
+            wire = tuple(bufs) if layout == "topk_complement" else bufs[0]
+        else:
+            wire = zero_wire
+        t0 = time.perf_counter()
+        params, wire, loss, overflow = step(
+            params, wire, batches, jnp.asarray(plan.step_mask[i]),
+            jnp.asarray(plan.weights[i]), jnp.asarray(plan.crs[i]),
+            jnp.asarray(plan.active[i]))
+        loss = float(loss)          # blocks: wall includes the round
+        wall = time.perf_counter() - t0
+        if ef:
+            if bool(overflow):
+                raise RuntimeError(
+                    f"round {plan.rounds[i]}: EF residual outgrew the "
+                    f"sparse width {width}")
+            arrays = wire if isinstance(wire, tuple) else (wire,)
+            store.scatter(sel, tuple(np.asarray(a)[:c_r] for a in arrays))
+        links_sel = [links[c] for c in sel]
+        crs_wire = strat.wire.cr_eff(plan.crs[i][plan.active[i]], n_flat)
+        times.add(cost_model.round_times(links_sel, v_bytes, crs_wire))
+        losses.append(loss)
+        wall_per_round.append(wall)
+        if cfg.verbose:
+            print(f"[fl] round {plan.rounds[i]} loss {loss:.4f} "
+                  f"cohort {c_r}/{cfg.population} "
+                  f"round_time {times.per_round[-1].actual:.2f}s")
+        if (pos + 1) % chunk == 0 or pos == len(todo) - 1:
+            save(plan.rounds[i] + 1)
+
+    if cfg.verbose:
+        print(f"[fl] done; accumulated comm time {times.actual:.1f}s "
+              f"(straggler-free min would be {times.min:.1f}s)")
+    return {"params": params, "residuals": store, "losses": losses,
+            "executed_rounds": [plan.rounds[i] for i in todo],
+            "wall_per_round": wall_per_round,
+            "chunk_rounds": [1] * len(todo), "times": times,
+            "resumed_from": resumed_from, "store": store}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="stablelm-1.6b")
@@ -355,6 +532,12 @@ def main():
                     help="rounds per scan chunk / checkpoint cadence "
                          "(0 = auto chunking, checkpoint at chunk ends)")
     ap.add_argument("--engine", choices=("scan", "round"), default="scan")
+    ap.add_argument("--population", type=int, default=0,
+                    help="registered client count P for streaming-cohort "
+                         "mode (0 = dense-state mode over --clients)")
+    ap.add_argument("--cohort", type=int, default=0,
+                    help="cohort slots C in population mode "
+                         "(0 = reuse --clients)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     run(FLTrainConfig(
@@ -366,6 +549,7 @@ def main():
         over_selection=args.over_selection,
         checkpoint_dir=args.checkpoint_dir,
         checkpoint_every=args.checkpoint_every, engine=args.engine,
+        population=args.population, cohort=args.cohort,
         seed=args.seed))
 
 

@@ -1,0 +1,506 @@
+"""Population-scale FL: the streaming-cohort engine, the sparse out-of-core
+client store, and the O(C) host planning primitives.
+
+The load-bearing claims, each asserted here:
+
+  * sparse <-> dense residual round-trip is LOSSLESS for every carry="ef"
+    strategy's declared layout (hypothesis seed sweep over ties, signed
+    zeros, and overflow widths);
+  * the streaming "population" engine is bit-exact with the dense-carry
+    "pop_scan" reference at small P — accuracies, comm times, and the full
+    final residual matrix;
+  * round state is O(C x n + P x k_max): the compiled round program's jaxpr
+    contains no [P, ...] allocation, and the store's peak residency does not
+    grow with P (the memory gate);
+  * the chunked store spills through the checkpointer and restores
+    bit-exactly, including after a save/restore with a read-only base;
+  * host planning stays O(C): sparse survivor draws, LinkArrays slices, and
+    the vectorized comm-time math all agree with their dense/scalar twins.
+"""
+import os
+import shutil
+import sys
+import tempfile
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, os.path.dirname(__file__))
+from hyputil import given, settings, st  # noqa: E402
+
+from repro.core import bcrs as bcrs_mod  # noqa: E402
+from repro.core import cost_model  # noqa: E402
+from repro.core import strategies as strat_mod  # noqa: E402
+from repro.core.aggregation import AggregationConfig  # noqa: E402
+from repro.fed import engine as engine_mod  # noqa: E402
+from repro.fed import mesh_round as mesh_mod  # noqa: E402
+from repro.fed import population as pop_mod  # noqa: E402
+from repro.fed import round_step as rs_mod  # noqa: E402
+from repro.fed.simulation import FLSimConfig, plan_cohort, run_fl  # noqa: E402
+from repro.ft.failures import FailureInjector  # noqa: E402
+
+EF_STRATEGIES = tuple(n for n in strat_mod.names()
+                      if strat_mod.get(n).carry == "ef")
+
+
+# ------------------------------------------------ sparse layout round-trip
+class TestSparseRoundTrip:
+    def test_every_ef_strategy_declares_a_layout(self):
+        assert EF_STRATEGIES, "registry lost its carry='ef' strategies"
+        for name in EF_STRATEGIES:
+            assert strat_mod.get(name).residual_layout in (
+                "topk_complement", "dense")
+
+    @staticmethod
+    def _random_sparse_rows(rng, c, n, width):
+        """Rows with nnz <= width, including exact ties and signed zeros."""
+        rows = np.zeros((c, n), np.float32)
+        for i in range(c):
+            nnz = int(rng.integers(0, width + 1))
+            cols = rng.choice(n, size=nnz, replace=False)
+            vals = rng.normal(size=nnz).astype(np.float32)
+            if nnz > 2:          # exact ties survive the stable argsort
+                vals[1] = vals[0]
+            rows[i, cols] = vals
+        return rows
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(min_value=0, max_value=2**32 - 1))
+    def test_sparsify_densify_lossless(self, seed):
+        rng = np.random.default_rng(seed)
+        c = int(rng.integers(1, 6))
+        n = int(rng.integers(4, 64))
+        width = int(rng.integers(1, n + 1))
+        rows = self._random_sparse_rows(rng, c, n, width)
+        idx, val, overflow = engine_mod.sparsify_rows(jnp.asarray(rows),
+                                                      width)
+        assert not bool(overflow)
+        back = np.asarray(engine_mod.densify_rows(idx, val, n))
+        assert np.array_equal(back, rows)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(min_value=0, max_value=2**32 - 1))
+    def test_overflow_flagged_not_silent(self, seed):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(8, 48))
+        width = int(rng.integers(1, n - 1))
+        rows = np.zeros((2, n), np.float32)
+        cols = rng.choice(n, size=width + 1, replace=False)
+        rows[0, cols] = rng.normal(size=width + 1).astype(np.float32)
+        _, _, overflow = engine_mod.sparsify_rows(jnp.asarray(rows), width)
+        assert bool(overflow)
+
+    @pytest.mark.parametrize("strategy", EF_STRATEGIES)
+    def test_store_round_trip_per_strategy(self, strategy):
+        """Whatever layout a carry='ef' strategy declares, scattering a
+        cohort's rows into a ClientStateStore and gathering them back is
+        the identity."""
+        layout = strat_mod.get(strategy).residual_layout
+        rng = np.random.default_rng(3)
+        n, width, p = 32, 12, 40
+        store = pop_mod.ClientStateStore(p, n, layout=layout, width=width,
+                                         chunk_clients=7)
+        ids = np.array([0, 6, 7, 13, 39])
+        if layout == "topk_complement":
+            rows = self._random_sparse_rows(rng, len(ids), n, width)
+            idx, val, ov = engine_mod.sparsify_rows(jnp.asarray(rows), width)
+            assert not bool(ov)
+            wire = (np.asarray(idx), np.asarray(val))
+        else:
+            rows = rng.normal(size=(len(ids), n)).astype(np.float32)
+            wire = (rows,)
+        store.scatter(ids, wire)
+        back = store.gather(ids)
+        for a, b in zip(wire, back):
+            assert np.array_equal(a, b)
+        dense = store.dump_dense()
+        assert np.array_equal(dense[ids], rows)
+        untouched = np.setdiff1d(np.arange(p), ids)
+        assert not dense[untouched].any()
+
+
+# ------------------------------------------------ store spill + restart
+class TestStoreSpillRestart:
+    def _fill(self, store, rng, p, n):
+        mirror = np.zeros((p, n), np.float32)
+        for lo in range(0, p, 10):
+            ids = np.arange(lo, min(lo + 10, p))
+            rows = rng.normal(size=(len(ids), n)).astype(np.float32)
+            store.scatter(ids, (rows,))
+            mirror[ids] = rows
+        return mirror
+
+    def test_spill_window_is_bounded_and_lossless(self, tmp_path):
+        p, n = 64, 16
+        rng = np.random.default_rng(0)
+        store = pop_mod.ClientStateStore(
+            p, n, layout="dense", chunk_clients=8, max_resident_chunks=2,
+            spill_dir=str(tmp_path / "spill"))
+        mirror = self._fill(store, rng, p, n)
+        assert store.chunk_spills > 0
+        # the LRU window, not the population, bounds residency
+        assert store.resident_bytes() <= 2 * 8 * n * 4
+        assert np.array_equal(store.dump_dense(), mirror)
+
+    def test_save_restore_bit_exact_then_divergeable(self, tmp_path):
+        p, n, width = 50, 24, 9
+        rng = np.random.default_rng(1)
+        store = pop_mod.ClientStateStore(p, n, layout="topk_complement",
+                                         width=width, chunk_clients=6)
+        ids = np.array([0, 5, 6, 17, 49])
+        rows = TestSparseRoundTrip._random_sparse_rows(rng, len(ids), n,
+                                                       width)
+        idx, val, _ = engine_mod.sparsify_rows(jnp.asarray(rows), width)
+        store.scatter(ids, (np.asarray(idx), np.asarray(val)))
+        manifest = store.save(str(tmp_path), 4)
+        before = store.dump_dense()
+
+        restored = pop_mod.ClientStateStore.restore(
+            str(tmp_path), 4, manifest,
+            spill_dir=str(tmp_path / "spill"))
+        assert np.array_equal(restored.dump_dense(), before)
+        # a restored store is writable without touching the snapshot
+        new_rows = TestSparseRoundTrip._random_sparse_rows(rng, 2, n, width)
+        i2, v2, _ = engine_mod.sparsify_rows(jnp.asarray(new_rows), width)
+        restored.scatter(np.array([5, 6]), (np.asarray(i2), np.asarray(v2)))
+        again = pop_mod.ClientStateStore.restore(
+            str(tmp_path), 4, manifest,
+            spill_dir=str(tmp_path / "spill2"))
+        assert np.array_equal(again.dump_dense(), before)
+
+    def test_restore_refuses_rechunk(self, tmp_path):
+        store = pop_mod.ClientStateStore(20, 8, layout="dense",
+                                         chunk_clients=4)
+        store.scatter(np.array([3]), (np.ones((1, 8), np.float32),))
+        man = store.save(str(tmp_path), 0)
+        with pytest.raises(ValueError, match="chunked"):
+            pop_mod.ClientStateStore.restore(str(tmp_path), 0, man,
+                                             chunk_clients=8)
+
+    def test_snapshot_pruning_follows_retention(self, tmp_path):
+        store = pop_mod.ClientStateStore(12, 8, layout="dense",
+                                         chunk_clients=4)
+        store.scatter(np.array([1]), (np.ones((1, 8), np.float32),))
+        for step in (2, 4, 6):
+            store.save(str(tmp_path), step)
+        pop_mod.prune_client_snapshots(str(tmp_path), keep_steps=[4, 6])
+        kept = sorted(d for d in os.listdir(str(tmp_path))
+                      if d.startswith("clients_step_"))
+        assert kept == ["clients_step_4", "clients_step_6"]
+
+
+# ------------------------------------------- engine parity at small P
+def _parity_sim(p=256, cohort=16, rounds=5):
+    # feasibility: dirichlet_partition rejects until every client holds
+    # >= batch_size samples, so n_train/P must comfortably exceed it at
+    # the chosen beta (beta=1.0 keeps skew without starving any client)
+    return FLSimConfig(n_clients=p, participation=cohort / p, rounds=rounds,
+                       n_train=p * 24, n_test=200, batch_size=4, beta=1.0,
+                       dim=16, hidden=16, n_classes=5, eval_every=2, seed=11)
+
+
+class TestEngineParity:
+    @pytest.mark.slow
+    @pytest.mark.parametrize("strategy", EF_STRATEGIES)
+    def test_population_matches_pop_scan_bit_exact(self, strategy):
+        """P=256, C=16: the streaming store engine reproduces the dense
+        [P+1, n]-carry scan reference exactly — accuracies, per-round comm
+        times, and every client's final residual row."""
+        sim = _parity_sim()
+        acfg = AggregationConfig(strategy=strategy, cr=0.25)
+        ref = run_fl(sim, acfg, engine="pop_scan")
+        res = run_fl(sim, acfg, engine="population")
+        assert [a for _, a in ref.accuracies] == \
+            [a for _, a in res.accuracies]
+        for t_ref, t_pop in zip(ref.times.per_round, res.times.per_round):
+            assert (t_ref.actual, t_ref.max, t_ref.min) == \
+                (t_pop.actual, t_pop.max, t_pop.min)
+        assert ref.final_residuals is not None
+        assert ref.final_residuals.shape[0] == sim.n_clients
+        assert np.array_equal(ref.final_residuals, res.final_residuals)
+        assert ref.final_residuals.any()   # EF state actually accumulated
+
+    def test_population_engine_refuses_overlap_collection(self):
+        sim = _parity_sim(p=32, cohort=4, rounds=2)
+        with pytest.raises(ValueError, match="overlap"):
+            run_fl(sim, AggregationConfig(strategy="eftopk", cr=0.25),
+                   engine="population", collect_overlap=True)
+
+
+# ----------------------------------------------------------- memory gate
+def _all_avals(jaxpr, out):
+    for eqn in jaxpr.eqns:
+        for v in list(eqn.invars) + list(eqn.outvars):
+            aval = getattr(v, "aval", None)
+            if aval is not None and hasattr(aval, "shape"):
+                out.append(aval)
+        for sub in jax.core.subjaxprs(eqn.jaxpr) if hasattr(
+                eqn, "jaxpr") else ():
+            _all_avals(sub, out)
+        for param in eqn.params.values():
+            inner = getattr(param, "jaxpr", param)
+            if hasattr(inner, "eqns"):
+                _all_avals(inner, out)
+    return out
+
+
+class TestMemoryGate:
+    def test_round_program_has_no_population_sized_aval(self):
+        """The tier-1 O(C x n + P x k_max) gate: trace the population round
+        program for a HUGE P and assert the jaxpr never materializes an
+        array with a P-sized dimension — state entering the jit is the
+        cohort slots plus the sparse wire rows, nothing scaled by P."""
+        huge_p = 1_000_000
+        c, dim, hidden, classes, s, b = 8, 16, 16, 5, 2, 4
+        from repro.fed.simulation import mlp_init, mlp_loss
+        params = mlp_init(jax.random.PRNGKey(0), dim, classes, hidden=hidden)
+        n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+        acfg = AggregationConfig(strategy="eftopk", cr=0.25)
+        from repro.core.compression import k_for_ratio
+        width = pop_mod.residual_width(n, k_for_ratio(n, acfg.cr))
+        step = rs_mod.make_population_round_step(
+            mlp_loss, params, lr=0.05, acfg=acfg, width=width)
+        flat = jnp.zeros((n,), jnp.float32)
+        res = step.init_residuals(c, n)
+        x = {"step_mask": jnp.ones((c, s), bool),
+             "active": jnp.ones((c,), bool),
+             "weights": jnp.full((c,), 1.0 / c, jnp.float32),
+             "ks": jnp.full((c,), k_for_ratio(n, acfg.cr), jnp.int32),
+             "batches": {"x": jnp.zeros((c, s, b, dim), jnp.float32),
+                         "y": jnp.zeros((c, s, b), jnp.int32)}}
+        closed = jax.make_jaxpr(step._fn)(flat, res, x)
+        avals = _all_avals(closed.jaxpr, [])
+        assert avals
+        biggest = max(int(np.prod(a.shape)) for a in avals)
+        # nothing in the program is within two orders of magnitude of a
+        # [P]-sized buffer, let alone [P, n]
+        assert biggest < huge_p // 100, (
+            f"population round program allocates {biggest} elements")
+        assert all(huge_p not in a.shape for a in avals)
+
+    def test_store_residency_flat_in_population(self, tmp_path):
+        """Same rounds, same cohort, 8x the population: identical compiled
+        program (TRACE_COUNTS grows by exactly 1 across both runs) and
+        identical peak host state bytes — the store's window, not P, is
+        the bound."""
+        acfg = AggregationConfig(strategy="eftopk", cr=0.2)
+        cfg = pop_mod.PopulationRunConfig(cohort=6, rounds=4, dim=16,
+                                          hidden=16, n_classes=5, seed=5)
+        traces0 = rs_mod.TRACE_COUNTS[("population", "eftopk")]
+        peaks = {}
+        step = None
+        for p in (512, 4096):
+            pop = pop_mod.make_population(p, seed=5)
+            res, step, store = pop_mod.run_population_rounds(
+                pop, cfg, acfg=acfg, step=step, chunk_clients=1,
+                max_resident_chunks=8,
+                spill_dir=str(tmp_path / f"spill_{p}"))
+            peaks[p] = res.peak_state_bytes
+            assert store.chunk_spills > 0   # the window actually evicted
+        assert rs_mod.TRACE_COUNTS[("population", "eftopk")] - traces0 == 1
+        assert peaks[4096] == peaks[512]
+
+
+# ------------------------------------------------------ O(C) host planning
+class TestHostPlanning:
+    def test_survivors_at_deterministic_and_per_id(self):
+        inj = FailureInjector(p_fail=0.4, seed=9)
+        ids = np.array([3, 999_999, 17, 400_000])
+        a = inj.survivors_at(2, ids)
+        b = inj.survivors_at(2, ids)
+        assert np.array_equal(a, b)
+        # per-id keying: a client's fate depends only on (seed, round, id),
+        # never on who else was sampled alongside it (cohort revive aside)
+        raw = np.array([np.random.default_rng(
+            (inj.seed, 2, int(c))).random() >= inj.p_fail for c in ids])
+        assert raw.any()     # draw produced survivors, so no revive fired
+        assert np.array_equal(a, raw)
+        perm = np.array([17, 3])
+        sub = inj.survivors_at(2, perm)
+        assert sub.tolist() == [bool(raw[2]), bool(raw[0])]
+
+    def test_survivors_at_scheduled_and_revive(self):
+        inj = FailureInjector(p_fail=0.0, scheduled=[(1, 42)], seed=0)
+        ids = np.array([7, 42, 99])
+        alive = inj.survivors_at(1, ids)
+        assert alive.tolist() == [True, False, True]
+        dead = FailureInjector(p_fail=1.0, seed=0)
+        alive = dead.survivors_at(0, ids)
+        assert alive.tolist() == [True, False, False]   # never lose everyone
+
+    def test_link_arrays_match_sample_links(self):
+        a = cost_model.sample_link_arrays(40, np.random.default_rng(3))
+        b = cost_model.sample_links(40, np.random.default_rng(3))
+        for i in (0, 7, 39):
+            assert a[i].bandwidth_bps == b[i].bandwidth_bps
+            assert a[i].latency_s == b[i].latency_s
+        sub = a.take(np.array([2, 5]))
+        assert sub.bandwidth_bps.tolist() == [a.bandwidth_bps[2],
+                                              a.bandwidth_bps[5]]
+
+    def test_comm_time_batch_bitwise_matches_scalar(self):
+        rng = np.random.default_rng(4)
+        bw = rng.uniform(0.5e6, 20e6, 32)
+        lat = rng.uniform(0.01, 0.3, 32)
+        crs = rng.uniform(0.01, 1.0, 32)
+        v = 4.0 * 12345
+        batch = bcrs_mod.comm_time_batch(v, bw, lat, crs)
+        scalar = np.array([
+            bcrs_mod.comm_time(v, cost_model.ClientLink(
+                bandwidth_bps=b, latency_s=l), cr)
+            for b, l, cr in zip(bw, lat, crs)])
+        assert np.array_equal(batch, scalar)
+
+    def test_plan_cohort_population_mode(self):
+        p, c = 100_000, 12
+        links = cost_model.sample_link_arrays(p, np.random.default_rng(0))
+        fracs = np.full(p, 1.0 / p)
+        acfg = AggregationConfig(strategy="eftopk", cr=0.2)
+        inj = FailureInjector(p_fail=0.3, seed=1)
+        rng = np.random.default_rng(8)
+        out = plan_cohort(3, rng, n_clients=p, participation=1.0,
+                          fracs_all=fracs, links=links, v_bytes=4e4,
+                          acfg=acfg, failure=inj, cohort=c,
+                          sparse_failures=True)
+        assert out is not None
+        sel, fr = out
+        assert 1 <= len(sel) <= c
+        assert len(np.unique(sel)) == len(sel)
+        assert sel.max() < p
+        np.testing.assert_allclose(fr.sum(), 1.0)
+        # deterministic under the same rng stream
+        sel2, _ = plan_cohort(3, np.random.default_rng(8), n_clients=p,
+                              participation=1.0, fracs_all=fracs,
+                              links=links, v_bytes=4e4, acfg=acfg,
+                              failure=inj, cohort=c, sparse_failures=True)
+        assert np.array_equal(sel, sel2)
+
+    def test_sample_cohort_unique_and_bounded(self):
+        ids = pop_mod.sample_cohort(np.random.default_rng(0), 1_000_000, 16)
+        assert len(ids) == 16 and len(np.unique(ids)) == 16
+        small = pop_mod.sample_cohort(np.random.default_rng(0), 8, 16)
+        assert len(small) == 8
+
+
+# --------------------------------------------------- mesh per-leaf adapter
+class TestMeshPopulationStep:
+    @pytest.mark.parametrize("strategy", ("eftopk", "qtopk", "bcrs_opwa",
+                                          "fedavg"))
+    def test_parity_with_mesh_round_step(self, strategy):
+        """The flat-wire population step reproduces the per-leaf reference
+        exactly: params, loss, and the densified residual rows."""
+        rng = np.random.default_rng(0)
+        params = {"w1": jnp.asarray(rng.normal(size=(6, 5)).astype(
+            np.float32)),
+            "b": jnp.asarray(rng.normal(size=(5,)).astype(np.float32)),
+            "w2": jnp.asarray(rng.normal(size=(5, 3)).astype(np.float32))}
+        n_total = sum(l.size for l in jax.tree.leaves(params))
+
+        def loss_fn(p, batch):
+            x, y = batch
+            h = jnp.tanh(x @ p["w1"] + p["b"])
+            logits = h @ p["w2"]
+            one = jax.nn.one_hot(y, 3)
+            ll = jnp.sum(one * jax.nn.log_softmax(logits), -1)
+            return -jnp.mean(ll), None
+
+        c, s, b = 4, 3, 8
+        batches = (jnp.asarray(rng.normal(size=(c, s, b, 6)).astype(
+            np.float32)),
+            jnp.asarray(rng.integers(0, 3, size=(c, s, b))))
+        step_mask = jnp.asarray(np.array(
+            [[1, 1, 1], [1, 1, 0], [1, 0, 0], [0, 0, 0]], bool))
+        coeffs = jnp.asarray(np.array([0.4, 0.3, 0.3, 0.0], np.float32))
+        crs = jnp.asarray(np.array([0.3, 0.5, 0.25, 0.3], np.float32))
+        active = jnp.asarray(np.array([1, 1, 1, 0], bool))
+        width = mesh_mod.mesh_residual_width(params, 0.25)
+
+        strat = strat_mod.get(strategy)
+        ef = strat.needs_residuals
+        layout = strat.residual_layout if ef else None
+        ref = mesh_mod.make_mesh_round_step(
+            loss_fn, strategy=strategy, lr_local=0.05, use_kernel=False,
+            donate=False)
+        pop = mesh_mod.make_population_round_step(
+            loss_fn, params, strategy=strategy, lr_local=0.05,
+            use_kernel=False, width=width, donate=False)
+
+        if ef:
+            rows = TestSparseRoundTrip._random_sparse_rows(
+                rng, c, n_total, width // 2)
+            res_template = jax.tree.map(
+                lambda l: jnp.zeros(l.shape, jnp.float32), params)
+            unf = engine_mod.make_unflatten(res_template)
+            res_tree = jax.vmap(unf)(jnp.asarray(rows))
+            if layout == "topk_complement":
+                idx, val, ov = engine_mod.sparsify_rows(jnp.asarray(rows),
+                                                        width)
+                assert not bool(ov)
+                wire = (idx, val)
+            else:
+                wire = jnp.asarray(rows)
+        else:
+            res_tree, wire = None, jnp.zeros((0,), jnp.float32)
+
+        p_ref, r_ref, l_ref = ref(params, res_tree, batches, step_mask,
+                                  coeffs, crs, active)
+        p_pop, w_pop, l_pop, ov = pop(params, wire, batches, step_mask,
+                                      coeffs, crs, active)
+        assert not bool(ov)
+        for a, b2 in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_pop)):
+            assert np.array_equal(np.asarray(a), np.asarray(b2))
+        assert float(l_ref) == float(l_pop)
+        if ef:
+            rows_ref = np.asarray(engine_mod.flatten_client_trees(r_ref))
+            if layout == "topk_complement":
+                rows_pop = np.asarray(engine_mod.densify_rows(
+                    *w_pop, n_total))
+            else:
+                rows_pop = np.asarray(w_pop)
+            assert np.array_equal(rows_ref, rows_pop)
+
+    def test_width_requires_positive_for_sparse(self):
+        def loss_fn(p, batch):
+            return jnp.float32(0.0), None
+        with pytest.raises(ValueError, match="width"):
+            mesh_mod.make_population_round_step(
+                loss_fn, {"w": jnp.zeros((4,))}, strategy="eftopk", width=0)
+
+
+# ------------------------------------------- fl_train streaming restart
+class TestFLTrainPopulation:
+    @pytest.mark.slow
+    def test_restart_bit_exact_including_sparse_store(self, tmp_path):
+        """Kill-and-resume of the real-model streaming driver: the resumed
+        run's params, losses, and every client's persisted residual match
+        an uninterrupted one bitwise."""
+        from repro.launch import fl_train as flt
+        base = dict(arch="stablelm-1.6b", reduced=True, clients=2,
+                    local_steps=1, batch=2, seq=16, lr=0.05, seed=0,
+                    verbose=False, strategy="eftopk", population=24,
+                    cohort=3, fail_prob=0.25, checkpoint_every=2)
+        d = str(tmp_path / "ckpt")
+        full = flt.run(flt.FLTrainConfig(rounds=4, checkpoint_dir=d, **base))
+        shutil.rmtree(d)
+        flt.run(flt.FLTrainConfig(rounds=2, checkpoint_dir=d, **base))
+        resumed = flt.run(flt.FLTrainConfig(rounds=4, checkpoint_dir=d,
+                                            **base))
+        assert resumed["resumed_from"] == 2
+        for a, b in zip(jax.tree.leaves(full["params"]),
+                        jax.tree.leaves(resumed["params"])):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+        assert full["losses"][2:] == resumed["losses"]
+        assert np.array_equal(full["store"].dump_dense(),
+                              resumed["store"].dump_dense())
+        assert full["store"].dump_dense().any()
+
+    def test_config_validation(self):
+        from repro.launch import fl_train as flt
+        with pytest.raises(ValueError, match="cohort"):
+            flt.FLTrainConfig(population=4, cohort=8)
+        cfg = flt.FLTrainConfig(population=100, clients=5)
+        assert cfg.cohort == 5 and cfg.c_slots == 5
+        assert cfg.n_registered == 100

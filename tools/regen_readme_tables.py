@@ -28,7 +28,7 @@ sys.path.insert(0, str(ROOT / "src"))
 from repro.core import strategies  # noqa: E402
 
 
-#: the five registry consumers — kept here, next to the registry-driven
+#: the registry consumers — kept here, next to the registry-driven
 #: table, so one command regenerates both
 ENGINE_ROWS = [
     ("`legacy`", "per-client eager loop", "simulation MLP",
@@ -37,11 +37,21 @@ ENGINE_ROWS = [
      "`fed/round_step.py`"),
     ("`scan`", "1 `lax.scan` per simulation",
      "flat `[n]` + `[C, n]` EF carry", "`engine.make_sim_scan`"),
+    ("`pop_scan`", "1 `lax.scan` per simulation",
+     "flat `[n]` + dense `[P + 1, n]` per-client EF carry (small-P "
+     "reference)", "`engine.make_sim_scan(population=P)`"),
+    ("`population`", "1 jit dispatch per round, state streamed per cohort",
+     "flat `[n]` + out-of-core sparse client store, O(C·n + P·(n−k_min))",
+     "`fed/population.py`"),
     ("mesh `round` (`fl_train --engine round`)", "1 jit dispatch per round",
      "real sharded arch, params pytree", "`fed/mesh_round.py`"),
     ("mesh `scan` (`fl_train` default)", "1 `lax.scan` per checkpoint chunk",
      "params pytree + per-leaf `[C, *leaf]` EF carry",
      "`engine.make_mesh_sim_scan`"),
+    ("mesh population (`fl_train --population P --cohort C`)",
+     "1 jit dispatch per round, state streamed per cohort",
+     "real arch, params pytree + flat-wire client store",
+     "`mesh_round.make_population_round_step`"),
 ]
 
 
