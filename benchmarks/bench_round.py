@@ -383,7 +383,10 @@ def run_mesh_scan(fast: bool = False,
 
 
 # ------------------------------------------------- megakernel pipeline
-KERNEL_STRATEGIES = ("topk", "bcrs_opwa", "eftopk")
+KERNEL_STRATEGIES = ("topk", "bcrs_opwa", "eftopk", "qtopk", "int4")
+#: scanned-simulation 1-compile probes: the plain megakernel route and the
+#: codec route
+KERNEL_SCAN_STRATEGIES = ("bcrs_opwa", "qtopk")
 
 
 def bench_kernels_cell(strategy: str, clients: int, n: int,
@@ -398,7 +401,7 @@ def bench_kernels_cell(strategy: str, clients: int, n: int,
     prediction — the roofline bytes are the portable win metric."""
     from repro.core.compression import k_for_ratio
     from repro.fed import engine as engine_mod
-    from repro.roofline import merge_traffic_ratio
+    from repro.roofline import merge_traffic_ratio, wire_stream_bytes
 
     rng = np.random.default_rng(clients * 7 + n % 1009)
     u = jnp.asarray(rng.normal(size=(clients, n)).astype(np.float32))
@@ -445,6 +448,11 @@ def bench_kernels_cell(strategy: str, clients: int, n: int,
     spec_ref = engine_mod.ClientUpdateSpec(strategy=strategy, gamma=5.0,
                                            use_kernel=False)
     out["roofline"] = merge_traffic_ratio(spec_ref, clients, n)
+    # upload pricing of the cell's median per-client k under the strategy's
+    # registered wire format (packed codecs beat the idx32+f32 reference
+    # pair on the per-survivor stream: int8 5/8, int4 9/16)
+    out["wire"] = wire_stream_bytes(strategy, n,
+                                    int(np.median(np.asarray(ks))))
     return out
 
 
@@ -471,17 +479,24 @@ def run_kernels(fast: bool = False,
                   f"ms  kernel {cell['kernel']['s_per_merge'] * 1e3:7.1f} ms"
                   f"  bit_exact={cell['bit_exact']}")
 
-    # the kernel-routed scan simulation must still be ONE compile end to end
-    before = sum(engine_mod.TRACE_COUNTS.values())
-    run_fl(FLSimConfig(rounds=4, n_clients=6, n_train=1200, n_test=300,
-                       dim=32, hidden=32, n_classes=5, eval_every=2, seed=2),
-           AggregationConfig(strategy="bcrs_opwa", cr=0.1, use_kernel=True),
-           engine="scan")
-    scan_traces = sum(engine_mod.TRACE_COUNTS.values()) - before
-    print(f"kernel-routed scan simulation: {scan_traces} trace(s)")
+    # the kernel-routed scan simulation must still be ONE compile end to
+    # end — for the plain megakernel route AND the codec route
+    scan_traces = {}
+    for scan_strat in KERNEL_SCAN_STRATEGIES:
+        before = sum(engine_mod.TRACE_COUNTS.values())
+        run_fl(FLSimConfig(rounds=4, n_clients=6, n_train=1200, n_test=300,
+                           dim=32, hidden=32, n_classes=5, eval_every=2,
+                           seed=2),
+               AggregationConfig(strategy=scan_strat, cr=0.1,
+                                 use_kernel=True),
+               engine="scan")
+        scan_traces[scan_strat] = (sum(engine_mod.TRACE_COUNTS.values())
+                                   - before)
+        print(f"kernel-routed scan simulation [{scan_strat}]: "
+              f"{scan_traces[scan_strat]} trace(s)")
 
     doc = {
-        "schema": "bench_kernels/v1",
+        "schema": "bench_kernels/v2",
         "env": {"platform": jax.devices()[0].platform,
                 "jax": jax.__version__,
                 "cpu_count": os.cpu_count(),
@@ -693,15 +708,22 @@ def main() -> int:
                       "columns are correctness/overhead datapoints, not a "
                       "hardware comparison; only the roofline bytes and "
                       "bit-exactness are checked")
+            # packed codec wires must beat the idx32+f32 reference pair on
+            # the per-survivor stream by their byte ratios
+            wire_caps = {"qtopk": 5.0 / 8.0, "int4": 9.0 / 16.0}
             bad = [c for c in doc["results"]
-                   if c["roofline"]["ratio"] < 3.0 or not c["bit_exact"]]
-            if bad or doc["scan_traces_with_kernels"] != 1:
+                   if c["roofline"]["ratio"] < 3.0 or not c["bit_exact"]
+                   or c["wire"]["pair_ratio"]
+                   > wire_caps.get(c["strategy"], 1.0) + 1e-12]
+            if bad or any(t != 1 for t in
+                          doc["scan_traces_with_kernels"].values()):
                 print(f"FAIL: kernels check "
                       f"(bad cells {[(c['strategy'], c['clients']) for c in bad]}, "
                       f"scan traces {doc['scan_traces_with_kernels']})")
                 return 1
-            print("OK: megakernel pipeline bit-exact, >=3x HBM traffic "
-                  "reduction, 1-compile kernel-routed scan")
+            print("OK: megakernel pipeline bit-exact (codec routes "
+                  "included), >=3x HBM traffic reduction, packed wire "
+                  "ratios within caps, 1-compile kernel-routed scans")
         return 0
     if args.sim_scan:
         out = ("BENCH_sim_scan.json" if args.out == "BENCH_round.json"

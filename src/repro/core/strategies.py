@@ -65,23 +65,38 @@ Capability fields (see docs/DESIGN.md §8 for the full table):
                                   (registration refuses layouts the math
                                   can't honor).
   megakernel   eligible for the traced-k Pallas pipeline (threshold_find +
-               fused_merge). Codec strategies must declare False: the kernel
-               has no dequantization stage (registration refuses the combo).
+               fused_merge). Codec strategies may opt in by ALSO declaring
+               ``kernel_codec`` — the kernel's per-tile quantize/dequantize
+               stage (see docs/DESIGN.md §10); a codec without a declared
+               kernel lowering must keep megakernel=False (registration
+               refuses the combo).
+  kernel_codec None, or the name of the fused_merge codec stage ("int8" /
+               "int4") whose in-kernel quantize->dequantize sequence is
+               bit-exact with this strategy's ``value_codec``. Declaring it
+               is the per-codec megakernel capability: the engines pass it
+               to ``kernels.ops.megakernel_aggregate`` so the whole
+               compress->codec->EF->merge pipeline stays in one tile pass.
 
 Shape follows the builder-registry pattern (SNIPPETS.md snippet 3): a
 validating ``register`` over a name-keyed table, duplicate names refused.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Callable, Optional, Tuple
 
 import jax.numpy as jnp
+from jax import lax
 
 __all__ = [
     "WireFormat", "Strategy", "StrategyRegistry", "REGISTRY",
     "register", "unregister", "get", "names",
-    "DENSE32", "SPARSE32", "PACKED_INT8", "int8_symmetric_codec",
+    "DENSE32", "SPARSE32", "PACKED_INT8", "PACKED_INT4",
+    "BITMASK_INT8", "BITMASK_INT4",
+    "CODEC_LEVELS", "symmetric_dequantize", "quantization_scale",
+    "scale_mantissa_bits",
+    "int8_symmetric_codec", "int4_symmetric_codec",
 ]
 
 #: bytes per survivor of the paper's reference sparse pair (int32 index +
@@ -101,20 +116,26 @@ class WireFormat:
     authoritative dense round time is ``cost_model.uncompressed_round``
     (T = L + V_bits / B). Sparse formats ship ``index_bytes + value_bytes``
     per survivor plus ``overhead_bytes`` per client message (e.g. a
-    quantization scale).
+    quantization scale). ``mask_bits`` replaces (or supplements) the
+    per-survivor index stream with a length-n bitmask: ``mask_bits`` bits
+    per COORDINATE regardless of k — cheaper than idx32 whenever
+    k/n > mask_bits/32 (1-bit mask beats 4-byte indices above ~3.1%
+    density).
     """
     kind: str                      # human-readable, lands in docs/README
     dense: bool = False
     index_bytes: float = 4.0
     value_bytes: float = 4.0
     overhead_bytes: float = 0.0
+    mask_bits: float = 0.0
 
     def bytes_on_wire(self, n_params: int, k) -> float:
         """Exact payload bytes one client uploads: ``k`` survivors out of
         ``n_params`` (``k`` ignored for dense formats)."""
         if self.dense:
             return 4.0 * n_params
-        return k * (self.index_bytes + self.value_bytes) + self.overhead_bytes
+        return (k * (self.index_bytes + self.value_bytes)
+                + self.mask_bits * n_params / 8.0 + self.overhead_bytes)
 
     def cr_eff(self, cr, n_params: Optional[int] = None):
         """Effective ratio to plug into the paper's ``comm_time`` (Alg. 2),
@@ -133,6 +154,10 @@ class WireFormat:
             return cr * 0.0 + 1.0 if hasattr(cr, "shape") else 1.0
         pair = self.index_bytes + self.value_bytes
         eff = cr if pair == _REF_PAIR_BYTES else cr * (pair / _REF_PAIR_BYTES)
+        if self.mask_bits:
+            # n bits of mask == (mask_bits/8) bytes per coordinate: a
+            # k-independent constant once normalized by the 8-byte ref pair
+            eff = eff + self.mask_bits / (8.0 * _REF_PAIR_BYTES)
         if self.overhead_bytes:
             if not n_params:
                 raise ValueError(
@@ -147,11 +172,88 @@ SPARSE32 = WireFormat(kind="idx32 + f32", index_bytes=4.0, value_bytes=4.0)
 PACKED_INT8 = WireFormat(kind="idx32 + int8 + scale32",
                          index_bytes=4.0, value_bytes=1.0,
                          overhead_bytes=4.0)
+PACKED_INT4 = WireFormat(kind="idx32 + int4 + scale32",
+                         index_bytes=4.0, value_bytes=0.5,
+                         overhead_bytes=4.0)
+BITMASK_INT8 = WireFormat(kind="bitmask + int8 + scale32",
+                          index_bytes=0.0, value_bytes=1.0,
+                          mask_bits=1.0, overhead_bytes=4.0)
+BITMASK_INT4 = WireFormat(kind="bitmask + int4 + scale32",
+                          index_bytes=0.0, value_bytes=0.5,
+                          mask_bits=1.0, overhead_bytes=4.0)
 
 
 # ------------------------------------------------------------- value codecs
-#: symmetric int8 grid: wire values live in [-127, 127]
+#: symmetric grids: wire values live in [-levels, levels]
 INT8_LEVELS = 127.0
+INT4_LEVELS = 7.0
+#: kernel-codec name -> quantization grid — the shared source of truth for
+#: the jnp codecs below AND the fused_merge kernel codec stage, so the two
+#: lowerings cannot drift (docs/DESIGN.md §10)
+CODEC_LEVELS = {"int8": INT8_LEVELS, "int4": INT4_LEVELS}
+
+
+def scale_mantissa_bits(levels: float) -> int:
+    """Mantissa bits kept in a symmetric-grid quantizer scale: with the
+    quantized magnitude needing ``ceil(log2(levels + 1))`` significand bits,
+    keeping ``23 - that`` mantissa bits in the scale makes every
+    ``q * scale`` product exactly representable in f32 (product significand
+    <= 24 bits). int8 (levels 127) -> 16 bits, int4 (levels 7) -> 20."""
+    return 23 - math.ceil(math.log2(levels + 1.0))
+
+
+def quantization_scale(absmax, levels):
+    """Per-row absmax -> the symmetric ``[-levels, levels]`` grid scale.
+
+    Two deliberate deviations from the textbook ``absmax / levels``, both
+    in service of bit-identical results across lowerings (the jnp codec
+    path runs eagerly; the fused_merge kernel codec stage runs inside jit,
+    and the two must agree bit for bit — docs/DESIGN.md §10):
+
+      * multiply by the host-rounded reciprocal instead of dividing:
+        XLA:CPU strength-reduces constant-divisor division to a reciprocal
+        multiply under jit but not in eager dispatch, a data-dependent
+        one-ULP drift between the two contexts. A plain multiply has no
+        such transform and is correctly rounded everywhere.
+
+      * round the result (to nearest, ties to even) to
+        ``scale_mantissa_bits(levels)`` mantissa bits. That makes every
+        ``q * scale`` dequantization product EXACT in f32, so the EF
+        residual ``corrected - q*scale`` — an fma-contraction target that
+        XLA:CPU demonstrably contracts inside fused loops (select/barrier
+        blockers get folded by fast-math codegen) — computes the same value
+        contracted or not.
+
+    The combined scale perturbation is <= 2^-16 relative — three orders
+    below the int8 grid's own quantization error, and EF absorbs both.
+    """
+    return lax.reduce_precision(absmax * jnp.float32(1.0 / levels), 8,
+                                scale_mantissa_bits(levels))
+
+
+def symmetric_dequantize(values, scale, levels):
+    """quantize-then-dequantize on the symmetric ``[-levels, levels]`` grid
+    with a precomputed per-row ``scale`` (broadcastable against ``values``,
+    from ``quantization_scale`` — the mantissa rounding there is what makes
+    this sequence bit-stable across lowerings).
+
+    This exact op sequence is shared by the jnp codecs and the fused_merge
+    kernel codec stage — bit-exactness between the two routes follows from
+    running the SAME ops on the SAME scale. An all-zero row has scale 0;
+    dividing by the ``where``-guarded 1.0 instead keeps the row exactly
+    zero (a ``maximum(scale, eps)`` floor breaks on denormal-flush
+    backends, where eps itself flushes to 0).
+    """
+    safe = jnp.where(scale > 0, scale, jnp.float32(1.0))
+    q = jnp.clip(jnp.round(values / safe), -levels, levels)
+    return q * scale
+
+
+def _symmetric_codec(values, levels):
+    v = values.astype(jnp.float32)
+    axes = tuple(range(1, v.ndim))
+    absmax = jnp.max(jnp.abs(v), axis=axes, keepdims=True)
+    return symmetric_dequantize(v, quantization_scale(absmax, levels), levels)
 
 
 def int8_symmetric_codec(values, mask):
@@ -168,12 +270,17 @@ def int8_symmetric_codec(values, mask):
     error with no extra engine code.
     """
     del mask
-    v = values.astype(jnp.float32)
-    axes = tuple(range(1, v.ndim))
-    scale = jnp.max(jnp.abs(v), axis=axes, keepdims=True) / INT8_LEVELS
-    scale = jnp.maximum(scale, jnp.float32(1e-30))  # all-zero row -> zeros
-    q = jnp.clip(jnp.round(v / scale), -INT8_LEVELS, INT8_LEVELS)
-    return q * scale
+    return _symmetric_codec(values, INT8_LEVELS)
+
+
+def int4_symmetric_codec(values, mask):
+    """Per-client symmetric int4 quantization (15-point grid) of the
+    surviving values — same contract as ``int8_symmetric_codec`` at a
+    quarter of the value-stream bytes. EF absorbs the (much larger)
+    quantization error, which is what keeps the biased low-bit compressor
+    sound (CFedAvg, arXiv 2106.07155)."""
+    del mask
+    return _symmetric_codec(values, INT4_LEVELS)
 
 
 # ---------------------------------------------------------------- strategy
@@ -197,6 +304,7 @@ class Strategy:
     wire: WireFormat = field(default=SPARSE32)
     megakernel: bool = True
     residual_layout: str = "dense"
+    kernel_codec: Optional[str] = None
 
     @property
     def compresses(self) -> bool:
@@ -260,6 +368,17 @@ class StrategyRegistry:
             raise ValueError(
                 f"strategy {strategy.name!r}: wire must be a WireFormat, "
                 f"got {type(strategy.wire)!r}")
+        if strategy.kernel_codec is not None:
+            if strategy.kernel_codec not in CODEC_LEVELS:
+                raise ValueError(
+                    f"strategy {strategy.name!r}: unknown kernel_codec "
+                    f"{strategy.kernel_codec!r} (one of "
+                    f"{tuple(CODEC_LEVELS)})")
+            if strategy.value_codec is None:
+                raise ValueError(
+                    f"strategy {strategy.name!r}: kernel_codec names the "
+                    "kernel lowering of a value_codec — declare the "
+                    "value_codec it must stay bit-exact with")
         if strategy.value_codec is not None:
             if not callable(strategy.value_codec):
                 raise ValueError(
@@ -270,11 +389,12 @@ class StrategyRegistry:
                     f"strategy {strategy.name!r}: a lossy value_codec "
                     "requires carry='ef' — without error feedback the "
                     "codec error is silently dropped bias")
-            if strategy.megakernel:
+            if strategy.megakernel and strategy.kernel_codec is None:
                 raise ValueError(
-                    f"strategy {strategy.name!r}: value_codec strategies "
-                    "must declare megakernel=False (the Pallas pipeline "
-                    "has no dequantization stage)")
+                    f"strategy {strategy.name!r}: a value_codec strategy "
+                    "may declare megakernel=True only with a kernel_codec "
+                    "(the fused_merge dequantization stage that matches "
+                    "its codec — see docs/DESIGN.md §10)")
         if strategy.residual_layout not in _RESIDUAL_LAYOUTS:
             raise ValueError(
                 f"strategy {strategy.name!r}: unknown residual_layout "
@@ -376,14 +496,25 @@ register(Strategy(
     carry="none", selector="topk", weighting="bcrs",
     overlap_weighted=True, wire=SPARSE32, megakernel=True))
 
-# Registry-only plugin (no engine file mentions it): int8-quantized Top-K
+# Registry-only plugins (no engine file mentions them): quantized Top-K
 # survivors — the FedSparQ sparsity-x-quantization direction. EF absorbs the
-# quantization error; the packed wire format (4+1 bytes/survivor + one f32
-# scale) makes its comm accounting honest, 8/5x cheaper than idx32+f32 at
-# equal sparsity.
+# quantization error; the packed wire formats (4+1 / 4+0.5 bytes/survivor +
+# one f32 scale) make their comm accounting honest, 8/5x / 16/9x cheaper
+# than idx32+f32 at equal sparsity. kernel_codec opts them into the Pallas
+# pipeline: fused_merge quantizes/dequantizes in the tile pass with the
+# scale threshold_find emitted (docs/DESIGN.md §10).
 register(Strategy(
     name="qtopk",
     description="int8-quantized Top-K survivors with EF absorbing the "
                 "quantization error; packed-bytes wire accounting",
     carry="ef", selector="topk", value_codec=int8_symmetric_codec,
-    weighting="data", wire=PACKED_INT8, megakernel=False))
+    weighting="data", wire=PACKED_INT8, megakernel=True,
+    kernel_codec="int8"))
+
+register(Strategy(
+    name="int4",
+    description="int4-quantized Top-K survivors (EF absorbs the error); "
+                "idx32+int4 packed wire at 9/16 of the reference pair",
+    carry="ef", selector="topk", value_codec=int4_symmetric_codec,
+    weighting="data", wire=PACKED_INT4, megakernel=True,
+    kernel_codec="int4"))

@@ -141,7 +141,11 @@ def make_compressed_train_step(model, opt, *, n_pods: int,
             f"for dense sync")
     opwa = strat.overlap_weighted
     value_codec = strat.value_codec
-    use_kernel = resolve_use_kernel(use_kernel) and value_codec is None
+    kernel_codec = strat.kernel_codec
+    # codec strategies take the kernel route iff they registered a kernel
+    # lowering for their codec (fused_merge's quantize/dequantize stage)
+    use_kernel = (resolve_use_kernel(use_kernel)
+                  and (value_codec is None or kernel_codec is not None))
     grad_fn = _grad_fn(model)
 
     def step(params, opt_state, batch, pod_crs, pod_coeffs):
@@ -180,7 +184,7 @@ def make_compressed_train_step(model, opt, *, n_pods: int,
             agg, new_e = compress_merge_leaf(
                 gf, coeffs, ks, gamma=gamma, overlap_d=overlap_d, opwa=opwa,
                 use_kernel=use_kernel, residuals=e.reshape(n_pods, n),
-                value_codec=value_codec)
+                value_codec=value_codec, kernel_codec=kernel_codec)
             return agg.reshape(g.shape[1:]), new_e.reshape(e.shape)
 
         pairs = jax.tree.map(sync_leaf, grads, ef)

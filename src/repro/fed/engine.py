@@ -93,10 +93,12 @@ class ClientUpdateSpec:
         # every global-top-k strategy at per-client traced ks — the paper's
         # BCRS-faithful default. Block-top-k configs keep the traced-k jnp
         # block path (per-block thresholds), dense strategies are already a
-        # single einsum pass, and codec strategies declare megakernel=False
-        # at registration. NOTE the old `use_ef_kernel` route (static-CR
-        # ef_update kernel) is gone: it silently compressed at spec.cr even
-        # when the schedule passed varying traced ks.
+        # single einsum pass, and codec strategies route through the
+        # kernel's quantize/dequantize stage iff they registered a
+        # kernel_codec (the megakernel capability is per-codec). NOTE the
+        # old `use_ef_kernel` route (static-CR ef_update kernel) is gone:
+        # it silently compressed at spec.cr even when the schedule passed
+        # varying traced ks.
         return (self.use_kernel and not self.block_topk
                 and self.strat.megakernel and self.strat.compresses)
 
@@ -250,15 +252,23 @@ def _aggregate_megakernel(spec: ClientUpdateSpec, updates: jax.Array,
     kernel), which silently compressed at ``spec.cr`` even when the BCRS
     schedule passed varying traced ``ks`` — the megakernel honors the traced
     per-client counts exactly (regression-tested in
-    tests/test_megakernel.py)."""
-    if spec.strat.overlap_weighted:
+    tests/test_megakernel.py).
+
+    Codec strategies ride the same pipeline: the registered
+    ``kernel_codec`` selects fused_merge's quantize/dequantize stage, with
+    the per-client scale emitted by threshold_find on its already-streamed
+    sweep — bit-exact with the jnp ``value_codec`` path (DESIGN.md §10)."""
+    codec = spec.strat.kernel_codec or "none"
+    if spec.strat.overlap_weighted and not spec.needs_residuals:
         agg = opwa_mod.opwa_aggregate_traced_k(
             updates, ks, w, spec.gamma, spec.overlap_d, active=active,
             use_kernel=True)
         return agg, residuals
     from repro.kernels import ops as kops
     agg, new_res = kops.megakernel_aggregate(
-        updates, ks, w, residuals=residuals, active=active)
+        updates, ks, w, residuals=residuals, active=active,
+        opwa=spec.strat.overlap_weighted, gamma=spec.gamma,
+        d=spec.overlap_d, codec=codec)
     return agg, (new_res if spec.needs_residuals else residuals)
 
 
@@ -330,7 +340,8 @@ def compress_merge_leaf(updates: jax.Array, coeffs: jax.Array, ks: jax.Array,
                         opwa: bool = True, use_kernel="auto",
                         residuals: Optional[jax.Array] = None,
                         active: Optional[jax.Array] = None,
-                        value_codec: Optional[Callable] = None
+                        value_codec: Optional[Callable] = None,
+                        kernel_codec: Optional[str] = None
                         ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """Compress + merge ONE leaf in its natural layout.
 
@@ -346,8 +357,11 @@ def compress_merge_leaf(updates: jax.Array, coeffs: jax.Array, ks: jax.Array,
     ``resolve_use_kernel`` so callers can pass "auto" straight through).
     ``value_codec`` (a registry ``Strategy.value_codec``) is applied to the
     survivors before the merge AND before the residual update, so EF absorbs
-    the codec error; codec leaves keep the jnp lowering (the megakernel has
-    no dequantization stage).
+    the codec error. ``kernel_codec`` (the registry's
+    ``Strategy.kernel_codec``) is the codec's kernel-route capability: when
+    set, the megakernel runs fused_merge's matching quantize/dequantize
+    stage — bit-exact with the jnp ``value_codec`` path — instead of
+    forcing the leaf back onto the jnp lowering.
 
     The kernel route runs the whole leaf through the traced-k megakernel
     pipeline (``threshold_find`` + ``fused_merge``) on a [C, leaf_n] view —
@@ -362,7 +376,8 @@ def compress_merge_leaf(updates: jax.Array, coeffs: jax.Array, ks: jax.Array,
     w = coeffs.astype(jnp.float32)
     if active is not None:
         w = jnp.where(active, w, 0.0)
-    if value_codec is None and comp.resolve_use_kernel(use_kernel):
+    if ((value_codec is None or kernel_codec is not None)
+            and comp.resolve_use_kernel(use_kernel)):
         from repro.kernels import ops as kops
         c, shape = updates.shape[0], updates.shape[1:]
         u2 = updates.astype(jnp.float32).reshape(c, -1)
@@ -370,7 +385,8 @@ def compress_merge_leaf(updates: jax.Array, coeffs: jax.Array, ks: jax.Array,
               if residuals is not None else None)
         agg2, new_res2 = kops.megakernel_aggregate(
             u2, ks, w, residuals=r2, active=active, opwa=opwa,
-            gamma=float(gamma), d=int(overlap_d))
+            gamma=float(gamma), d=int(overlap_d),
+            codec=kernel_codec or "none")
         return (agg2.reshape(shape),
                 new_res2.reshape((c,) + shape) if residuals is not None
                 else None)

@@ -74,6 +74,7 @@ def make_round_body(loss_fn: Callable, *, lr_local: float = 1e-2,
     compress = strat.compresses
     opwa = strat.overlap_weighted
     value_codec = strat.value_codec
+    kernel_codec = strat.kernel_codec
     local_train = make_masked_local_trainer(loss_fn, lr_local)
 
     def body(params, residuals, batches, step_mask, coeffs, crs, active):
@@ -102,7 +103,7 @@ def make_round_body(loss_fn: Callable, *, lr_local: float = 1e-2,
                 agg, new_res = compress_merge_leaf(
                     dl, w, ks, gamma=gamma, overlap_d=overlap_d, opwa=opwa,
                     use_kernel=use_kernel, residuals=res, active=active,
-                    value_codec=value_codec)
+                    value_codec=value_codec, kernel_codec=kernel_codec)
             return (p.astype(jnp.float32) - eta * agg).astype(p.dtype), new_res
 
         leaves_p, treedef = jax.tree.flatten(params)

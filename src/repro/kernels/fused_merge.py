@@ -11,6 +11,7 @@ n-tile and entirely in VMEM:
     corrected = residuals + updates          (EF configs)
     mask      = bitcast(|corrected|) >= threshold   (ties kept)
     send      = corrected . mask             (x active-row gating)
+    send      = dequant(quant(send, scale))  (codec configs: int8/int4 grid)
     counts    = sum_c mask                   (degree of overlap)
     M         = gamma where 0 < counts <= D else 1   (OPWA, Alg. 3)
     agg       = M . sum_c w_c * send         (coefficient-weighted merge)
@@ -20,6 +21,16 @@ writing only the aggregate tile [1, T] (plus the residual tile for EF
 configs) back to HBM. It generalizes and subsumes the three static-k kernels
 (``block_topk``'s selection, ``ef_update``'s EF arithmetic,
 ``overlap_combine``'s merge) at traced per-client k.
+
+The codec stage (``codec="int8"|"int4"``) quantizes the send tile onto the
+symmetric integer grid with the per-client ``scales`` column (derived from
+``threshold_find``'s row absmax — for Top-K the survivors' absmax equals
+the row absmax, so it costs no extra pass) and merges the DEQUANTIZED
+values; ``residual' = corrected - dequant(send)`` makes EF absorb the
+quantization error. The quantize->dequantize op sequence is
+``core.strategies.symmetric_dequantize`` — literally the same function the
+jnp ``value_codec`` path runs — so the two routes are bit-exact per tile
+(docs/DESIGN.md §10).
 
 Bit-exactness contract (asserted in tests/test_megakernel.py): every
 intermediate uses the same op sequence as the jnp reference in
@@ -41,16 +52,21 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+# the quantize->dequantize op sequence shared with the jnp value_codec path
+# (strategies imports only jnp — no cycle)
+from repro.core.strategies import CODEC_LEVELS, symmetric_dequantize
+
 TILE_N = 1024
 
 
 def _fused_merge_kernel(ef: bool, opwa: bool, gamma: float, d: int,
-                        has_active: bool, *refs):
+                        has_active: bool, codec: str, *refs):
     refs = list(refs)
     x_ref = refs.pop(0)
     e_ref = refs.pop(0) if ef else None
     th_ref = refs.pop(0)
     w_ref = refs.pop(0)
+    sc_ref = refs.pop(0) if codec != "none" else None
     act_ref = refs.pop(0) if has_active else None
     agg_ref = refs.pop(0)
     newres_ref = refs.pop(0) if ef else None
@@ -60,6 +76,12 @@ def _fused_merge_kernel(ef: bool, opwa: bool, gamma: float, d: int,
     bits = jax.lax.bitcast_convert_type(jnp.abs(corrected), jnp.uint32)
     mask = bits >= th_ref[...]                              # [C, T]
     vals = jnp.where(mask, corrected, jnp.float32(0.0))
+    if codec != "none":
+        # the jnp codec's exact op sequence on the jnp codec's exact scale
+        # (absmax/levels, prefetched as a [C, 1] column) — survivors land on
+        # the integer grid, non-survivors stay exactly zero, all-zero rows
+        # keep scale 0 and dequantize to exact zeros
+        vals = symmetric_dequantize(vals, sc_ref[...], CODEC_LEVELS[codec])
 
     if ef:
         new_res = corrected - vals
@@ -92,20 +114,44 @@ def fused_merge_pallas(x2d: jax.Array, thresholds: jax.Array,
                        e2d: jax.Array | None = None,
                        active: jax.Array | None = None,
                        *, opwa: bool = False, gamma: float = 1.0, d: int = 1,
+                       codec: str = "none",
+                       scales: jax.Array | None = None,
                        interpret: bool = True):
-    """x2d: [C, n] f32 (n % TILE_N == 0, zero-padded tail); thresholds:
-    [C, 1] uint32 bit-pattern thresholds (from ``threshold_find_pallas``);
-    weights: [C, 1] f32 merge coefficients; e2d: optional EF residuals
-    [C, n]; active: optional [C, 1] f32 row gate (exactly 1.0 / 0.0).
+    """x2d: [C, n] f32 (any n — a ragged tail is zero-padded internally and
+    the outputs sliced back); thresholds: [C, 1] uint32 bit-pattern
+    thresholds (from ``threshold_find_pallas``); weights: [C, 1] f32 merge
+    coefficients; e2d: optional EF residuals [C, n]; active: optional
+    [C, 1] f32 row gate (exactly 1.0 / 0.0); codec + scales: optional
+    quantization stage — scales [C, 1] f32 per-client symmetric grid scales
+    (``strategies.quantization_scale`` of ``threshold_find``'s absmax; its
+    mantissa rounding makes every dequantization product exact, so the EF
+    subtraction below is immune to fma contraction).
+
+    Zero padding is safe under every config: padded lanes have
+    corrected == 0, so whatever the mask decides there (an all-True tie at
+    a zero threshold included) contributes exactly-zero values, the codec
+    maps them back to zero, overlap counts are per-lane, and the padded agg
+    and residual lanes are sliced off before returning.
 
     Returns agg [1, n] f32, or (agg, new_residuals [C, n]) when ``e2d`` is
     given.
     """
     c, n = x2d.shape
-    assert n % TILE_N == 0, f"n={n} must be a multiple of {TILE_N}"
+    if codec != "none":
+        assert codec in CODEC_LEVELS, f"unknown codec {codec!r}"
+        assert scales is not None, "codec needs per-client scales"
+        assert e2d is not None, (
+            "codec without EF residuals silently drops the quantization "
+            "error (same contract the strategy registry enforces)")
+    n_pad = (-n) % TILE_N
+    if n_pad:
+        x2d = jnp.pad(x2d, ((0, 0), (0, n_pad)))
+        if e2d is not None:
+            e2d = jnp.pad(e2d, ((0, 0), (0, n_pad)))
+    np_ = n + n_pad
     ef = e2d is not None
     has_active = active is not None
-    grid = (n // TILE_N,)
+    grid = (np_ // TILE_N,)
     tile = pl.BlockSpec((c, TILE_N), lambda t: (0, t))
     col = pl.BlockSpec((c, 1), lambda t: (0, 0))
 
@@ -115,23 +161,30 @@ def fused_merge_pallas(x2d: jax.Array, thresholds: jax.Array,
         args.append(e2d)
     in_specs += [col, col]
     args += [thresholds, weights.astype(jnp.float32)]
+    if codec != "none":
+        in_specs.append(col)
+        args.append(scales.astype(jnp.float32))
     if has_active:
         in_specs.append(col)
         args.append(active.astype(jnp.float32))
 
     out_specs = [pl.BlockSpec((1, TILE_N), lambda t: (0, t))]
-    out_shape = [jax.ShapeDtypeStruct((1, n), jnp.float32)]
+    out_shape = [jax.ShapeDtypeStruct((1, np_), jnp.float32)]
     if ef:
         out_specs.append(tile)
-        out_shape.append(jax.ShapeDtypeStruct((c, n), jnp.float32))
+        out_shape.append(jax.ShapeDtypeStruct((c, np_), jnp.float32))
 
     out = pl.pallas_call(
         functools.partial(_fused_merge_kernel, ef, opwa, float(gamma),
-                          int(d), has_active),
+                          int(d), has_active, codec),
         grid=grid,
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
     )(*args)
+    if n_pad:
+        if ef:
+            return out[0][:, :n], out[1][:, :n]
+        return out[0][:, :n]
     return (out[0], out[1]) if ef else out[0]

@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.compression import Compressed, k_for_ratio
+from repro.core.strategies import CODEC_LEVELS, quantization_scale
 from repro.kernels.block_topk import ROWS_TILE, block_topk_pallas
 from repro.kernels.ef_update import ef_update_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
@@ -78,20 +79,26 @@ def topk_thresholds(updates: jax.Array, ks: jax.Array,
     return th[:, 0]
 
 
-@functools.partial(jax.jit, static_argnames=("opwa", "gamma", "d"))
+@functools.partial(jax.jit, static_argnames=("opwa", "gamma", "d", "codec"))
 def megakernel_aggregate(updates: jax.Array, ks: jax.Array,
                          weights: jax.Array,
                          residuals: jax.Array | None = None,
                          active: jax.Array | None = None,
                          *, opwa: bool = False, gamma: float = 1.0,
-                         d: int = 1):
+                         d: int = 1, codec: str = "none"):
     """Whole flat-space client merge through the two-kernel pipeline:
     threshold-find (8 HBM sweeps) + fused apply/merge (1 pass) — vs the
     ~35 passes of the unfused XLA lowering (see repro.roofline.kernel_bytes).
 
     updates [C, n] f32; ks [C] i32 traced; weights [C] f32; residuals
     optional [C, n] (switches on EF arithmetic and the new-residual output);
-    active optional bool [C] (padded-cohort gating, engine semantics).
+    active optional bool [C] (padded-cohort gating, engine semantics);
+    codec: "none" | "int8" | "int4" — quantize/dequantize the survivors
+    inside the merge tile pass (requires residuals: EF absorbs the
+    quantization error). The per-client scale is the row absmax emitted by
+    threshold-find on its already-streamed sweep, fed through the identical
+    ``strategies.quantization_scale`` the jnp ``value_codec`` uses, so the
+    scales (and everything downstream) match bit for bit.
 
     Returns (agg [n] f32, new_residuals [C, n] | None) — bit-exact with the
     jnp path of ``fed.engine.aggregate_updates``.
@@ -102,13 +109,21 @@ def megakernel_aggregate(updates: jax.Array, ks: jax.Array,
     ep = (jnp.pad(residuals.astype(jnp.float32), ((0, 0), (0, n_pad)))
           if residuals is not None else None)
     # MERGE_TILE is a multiple of THRESH_TILE: one padding serves both
-    th = threshold_find_pallas(up, ks.reshape(c, 1), ep,
-                               interpret=_interpret())
+    if codec == "none":
+        th = threshold_find_pallas(up, ks.reshape(c, 1), ep,
+                                   interpret=_interpret())
+        scales = None
+    else:
+        th, absmax = threshold_find_pallas(up, ks.reshape(c, 1), ep,
+                                           emit_scale=True,
+                                           interpret=_interpret())
+        scales = quantization_scale(absmax, CODEC_LEVELS[codec])
     act = (active.astype(jnp.float32).reshape(c, 1)
            if active is not None else None)
     out = fused_merge_pallas(up, th, weights.astype(jnp.float32)
                              .reshape(c, 1), ep, act, opwa=opwa,
-                             gamma=gamma, d=d, interpret=_interpret())
+                             gamma=gamma, d=d, codec=codec, scales=scales,
+                             interpret=_interpret())
     if residuals is None:
         return out[0, :n], None
     agg, new_res = out

@@ -42,15 +42,21 @@ def threshold_find_ref(x2d: jax.Array, ks: jax.Array,
 def fused_merge_ref(x2d: jax.Array, thresholds: jax.Array, weights: jax.Array,
                     e2d: jax.Array | None = None,
                     active: jax.Array | None = None,
-                    *, opwa: bool = False, gamma: float = 1.0, d: int = 1):
+                    *, opwa: bool = False, gamma: float = 1.0, d: int = 1,
+                    codec: str = "none", scales: jax.Array | None = None):
     """Oracle for the apply/merge megakernel: same op sequence as the jnp
-    path in ``fed.engine.aggregate_updates``. Returns agg [1, n] (plus
+    path in ``fed.engine.aggregate_updates``. ``codec`` + ``scales`` [C, 1]
+    mirror the kernel's quantization stage (survivors dequantized before the
+    merge; EF absorbs the quantization error). Returns agg [1, n] (plus
     new_residuals [C, n] when ``e2d`` is given)."""
+    from repro.core.strategies import CODEC_LEVELS, symmetric_dequantize
     x = x2d.astype(jnp.float32)
     corrected = e2d.astype(jnp.float32) + x if e2d is not None else x
     bits = jax.lax.bitcast_convert_type(jnp.abs(corrected), jnp.uint32)
     mask = bits >= thresholds.reshape(-1, 1)
     vals = jnp.where(mask, corrected, 0.0)
+    if codec != "none":
+        vals = symmetric_dequantize(vals, scales, CODEC_LEVELS[codec])
     new_res = corrected - vals if e2d is not None else None
     if active is not None:
         act = active.reshape(-1, 1)

@@ -27,6 +27,16 @@ schedule. The optional ``e2d`` input switches the selection quantity to the
 error-feedback ``corrected = residuals + updates`` without materializing it
 in HBM.
 
+``emit_scale`` additionally returns the per-client row absmax
+``max_j |corrected_ij|`` — the quantity a symmetric quantizer's scale is
+derived from. It rides on sweep 0's existing streamed tiles (a running
+max-of-tile-maxes in the output's VMEM block), so it costs ZERO extra HBM
+passes; fp max is exact and associative, so the tile-wise accumulation is
+bit-identical to ``jnp.max(jnp.abs(corrected), axis=1)``. For Top-K
+selection this absmax IS the survivors' absmax (k >= 1 keeps the largest
+magnitude, ties or not), which is why the downstream codec kernel can use
+it as the jnp codec's scale verbatim (docs/DESIGN.md §10).
+
 Padding contract: tail lanes past the real ``n`` must be zero. Candidate
 boundaries are always >= 1 (``step >= 1``, ``j >= 1``), so zero-padded lanes
 can never be counted and the thresholds are those of the unpadded rows.
@@ -50,18 +60,32 @@ TILE_N = 512
 _STEP0 = np.uint32((1 << 31) // WAYS)
 
 
-def _threshold_find_kernel(has_res: bool, ks_ref, x_ref, *rest):
+def _threshold_find_kernel(has_res: bool, emit_scale: bool, ks_ref, x_ref,
+                           *rest):
+    rest = list(rest)
+    e_ref = rest.pop(0) if has_res else None
+    th_ref = rest.pop(0)
+    sc_ref = rest.pop(0) if emit_scale else None
+    lo_ref, cnt_ref = rest
     if has_res:
-        e_ref, th_ref, lo_ref, cnt_ref = rest
         corrected = (e_ref[...].astype(jnp.float32)
                      + x_ref[...].astype(jnp.float32))
     else:
-        th_ref, lo_ref, cnt_ref = rest
         corrected = x_ref[...].astype(jnp.float32)
     s = pl.program_id(0)
     t = pl.program_id(1)
     nt = pl.num_programs(1)
     bits = jax.lax.bitcast_convert_type(jnp.abs(corrected), jnp.uint32)
+
+    if emit_scale:
+        # per-client absmax accumulated over sweep 0's tiles only — the
+        # operand stream is already paid for, and the output block maps to
+        # (0, 0) for every grid step so the running max persists in VMEM
+        @pl.when(s == 0)
+        def _():
+            tilemax = jnp.max(jnp.abs(corrected), axis=1, keepdims=True)
+            prev = jnp.where(t == 0, jnp.float32(0.0), sc_ref[...])
+            sc_ref[...] = jnp.maximum(prev, tilemax)
 
     @pl.when(jnp.logical_and(s == 0, t == 0))
     def _():
@@ -105,14 +129,18 @@ def _threshold_find_kernel(has_res: bool, ks_ref, x_ref, *rest):
 
 def threshold_find_pallas(x2d: jax.Array, ks: jax.Array,
                           e2d: jax.Array | None = None,
-                          *, interpret: bool = True) -> jax.Array:
+                          *, emit_scale: bool = False,
+                          interpret: bool = True):
     """x2d: [C, n] f32 (n % TILE_N == 0, zero-padded tail); ks: [C, 1] i32
     traced retained counts (1 <= k <= real n); e2d: optional matching EF
     residuals — thresholds are then those of ``e2d + x2d``.
 
     Returns the k-th-largest |.| bit patterns as uint32 [C, 1]: the exact
     Top-K mask is ``bitcast(|x|) >= thresholds`` (ties kept), matching
-    ``topk_compress_dynamic`` bit for bit.
+    ``topk_compress_dynamic`` bit for bit. With ``emit_scale`` returns
+    ``(thresholds, absmax [C, 1] f32)`` — the per-client
+    ``max |corrected|``, bit-identical to the jnp row max (see module
+    docstring), free-riding on sweep 0's operand stream.
     """
     c, n = x2d.shape
     assert n % TILE_N == 0, f"n={n} must be a multiple of {TILE_N}"
@@ -122,17 +150,24 @@ def threshold_find_pallas(x2d: jax.Array, ks: jax.Array,
     if e2d is not None:
         in_specs.append(bs)
         args.append(e2d)
+    col = pl.BlockSpec((c, 1), lambda s, t, *_: (0, 0))
+    out_specs = [col, col] if emit_scale else col
+    out_shape = jax.ShapeDtypeStruct((c, 1), jnp.uint32)
+    if emit_scale:
+        out_shape = [out_shape, jax.ShapeDtypeStruct((c, 1), jnp.float32)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(SWEEPS, nt),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((c, 1), lambda s, t, *_: (0, 0)),
+        out_specs=out_specs,
         scratch_shapes=[pltpu.VMEM((c, 1), jnp.uint32),
                         pltpu.VMEM((c, WAYS - 1), jnp.int32)],
     )
-    return pl.pallas_call(
-        functools.partial(_threshold_find_kernel, e2d is not None),
+    out = pl.pallas_call(
+        functools.partial(_threshold_find_kernel, e2d is not None,
+                          emit_scale),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((c, 1), jnp.uint32),
+        out_shape=out_shape,
         interpret=interpret,
     )(ks.astype(jnp.int32), *args)
+    return (out[0], out[1]) if emit_scale else out

@@ -3,9 +3,10 @@ from repro.roofline.analysis import (DCN_BW, HBM_BW, ICI_BW, PEAK_FLOPS,
                                      model_flops, parse_collectives)
 from repro.roofline.kernel_bytes import (megakernel_hbm_bytes,
                                          merge_traffic_ratio,
-                                         unfused_merge_bytes)
+                                         unfused_merge_bytes,
+                                         wire_stream_bytes)
 
 __all__ = ["analyze", "parse_collectives", "model_flops", "Roofline",
            "CollectiveSummary", "PEAK_FLOPS", "HBM_BW", "ICI_BW", "DCN_BW",
            "megakernel_hbm_bytes", "unfused_merge_bytes",
-           "merge_traffic_ratio"]
+           "merge_traffic_ratio", "wire_stream_bytes"]

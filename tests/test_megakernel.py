@@ -305,3 +305,230 @@ class TestKernelRoutedScanSim:
             assert sum(engine.TRACE_COUNTS.values()) - before == 1
             accs[use_kernel] = np.array([a for _, a in res.accuracies])
         np.testing.assert_array_equal(accs[True], accs[False])
+
+# --------------------------------------------------------------- codec stage
+CODEC_STRATEGIES = ("qtopk", "int4")
+
+
+def _codec_of(strategy):
+    from repro.core import strategies as strat_mod
+    return strat_mod.get(strategy).kernel_codec
+
+
+def _codec_scales(corrected, codec):
+    from repro.core.strategies import CODEC_LEVELS, quantization_scale
+    absmax = jnp.max(jnp.abs(corrected.astype(jnp.float32)), axis=1,
+                     keepdims=True)
+    return quantization_scale(absmax, CODEC_LEVELS[codec])
+
+
+class TestFusedMergeCodec:
+    """Tile-level oracle parity for the quantize/dequantize merge stage."""
+
+    @pytest.mark.parametrize("codec", ["int8", "int4"])
+    @pytest.mark.parametrize("gated", [False, True])
+    @pytest.mark.parametrize("opwa", [False, True])
+    def test_vs_ref(self, codec, gated, opwa):
+        c, n = 7, 2048
+        u, e, w, ks = _case(c, n, seed=61)
+        u = u.at[3].set(0.0)                    # all-zero row -> scale 0
+        e = e.at[3].set(0.0)
+        th = ref.threshold_find_ref(u, ks, e)
+        scales = _codec_scales(e + u, codec)
+        active = jnp.asarray([1.0] * (c - 2) + [0.0] * 2).reshape(c, 1)
+        act = active if gated else None
+        out = fused_merge_pallas(u, th, w.reshape(c, 1), e, act,
+                                 opwa=opwa, gamma=4.0, d=2, codec=codec,
+                                 scales=scales, interpret=True)
+        want = ref.fused_merge_ref(u, th, w, e, act, opwa=opwa, gamma=4.0,
+                                   d=2, codec=codec, scales=scales)
+        np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(want[0]))
+        np.testing.assert_array_equal(np.asarray(out[1]), np.asarray(want[1]))
+
+    def test_codec_requires_scales_and_residuals(self):
+        c, n = 3, 1024
+        u, e, w, ks = _case(c, n, seed=62)
+        th = ref.threshold_find_ref(u, ks, e)
+        with pytest.raises(AssertionError, match="scales"):
+            fused_merge_pallas(u, th, w.reshape(c, 1), e, codec="int8",
+                               interpret=True)
+        with pytest.raises(AssertionError, match="residuals"):
+            fused_merge_pallas(u, th, w.reshape(c, 1), codec="int8",
+                               scales=_codec_scales(e + u, "int8"),
+                               interpret=True)
+
+
+class TestFusedMergeRaggedWidth:
+    """The merge kernel zero-pads ragged widths internally (the old hard
+    ``n % TILE_N == 0`` assert) and slices the outputs back."""
+
+    @pytest.mark.parametrize("n", [4, 10, 1500, 2050])
+    @pytest.mark.parametrize("codec", ["none", "int8"])
+    def test_vs_ref_even_ragged(self, n, codec):
+        # even widths: the jnp reference einsum and the kernel's tile-padded
+        # dot accumulate identically (see DESIGN.md §10 on the XLA:CPU gemv
+        # tail of small ODD widths — a pre-existing artifact shared by every
+        # kernel strategy, orthogonal to padding and codecs)
+        c = 5
+        u, e, w, ks = _case(c, n, seed=63 + n)
+        th = ref.threshold_find_ref(u, ks, e)
+        scales = _codec_scales(e + u, "int8") if codec != "none" else None
+        out = fused_merge_pallas(u, th, w.reshape(c, 1), e, codec=codec,
+                                 scales=scales, interpret=True)
+        want = ref.fused_merge_ref(u, th, w, e, codec=codec, scales=scales)
+        assert out[0].shape == (1, n) and out[1].shape == (c, n)
+        np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(want[0]))
+        np.testing.assert_array_equal(np.asarray(out[1]), np.asarray(want[1]))
+
+    def test_odd_width_residuals_exact(self):
+        # literally-odd width: the elementwise outputs (residuals) are still
+        # bit-exact; the merged aggregate is only pinned to a few ULP
+        # because the reference's [C, n] gemv uses a different tail
+        # accumulation than the kernel's tile-aligned dot at small odd n
+        c, n = 5, 17
+        u, e, w, ks = _case(c, n, seed=64)
+        th = ref.threshold_find_ref(u, ks, e)
+        out = fused_merge_pallas(u, th, w.reshape(c, 1), e, interpret=True)
+        want = ref.fused_merge_ref(u, th, w, e)
+        np.testing.assert_array_equal(np.asarray(out[1]), np.asarray(want[1]))
+        np.testing.assert_allclose(np.asarray(out[0]), np.asarray(want[0]),
+                                   rtol=1e-6, atol=0)
+
+
+class TestCodecScaleProvenance:
+    """threshold_find's emitted absmax IS the jnp codec's scale source: for
+    Top-K (ties kept, k >= 1) the survivors' absmax equals the row absmax,
+    and fp max is exact, so the tile-accumulated max matches ``jnp.max``
+    bit for bit — including all-zero rows (scale 0) and tied rows."""
+
+    def test_absmax_matches_row_max(self):
+        c, n = 6, 512 * 5
+        u, e, _, ks = _case(c, n, seed=65)
+        u = u.at[2].set(0.0)
+        e = e.at[2].set(0.0)
+        u = u.at[4, :600].set(u[4, 0])          # ties
+        th, absmax = threshold_find_pallas(u, ks.reshape(c, 1), e,
+                                           emit_scale=True, interpret=True)
+        np.testing.assert_array_equal(
+            np.asarray(th),
+            np.asarray(threshold_find_pallas(u, ks.reshape(c, 1), e,
+                                             interpret=True)))
+        want = jnp.max(jnp.abs(e + u), axis=1, keepdims=True)
+        np.testing.assert_array_equal(np.asarray(absmax), np.asarray(want))
+
+    def test_survivor_absmax_equals_row_absmax(self):
+        u, e, _, ks = _case(8, 2048, seed=66)
+        corrected = e + u
+        comp = jax.vmap(C.topk_compress_dynamic)(corrected, ks)
+        surv = jnp.max(jnp.abs(comp.values), axis=1)
+        np.testing.assert_array_equal(
+            np.asarray(surv), np.asarray(jnp.max(jnp.abs(corrected), axis=1)))
+
+
+class TestCodecKernelParity:
+    """End-to-end aggregate_updates: the codec megakernel route must match
+    the jnp value_codec path bit for bit — aggregate AND EF residuals."""
+
+    @pytest.mark.parametrize("strategy", CODEC_STRATEGIES)
+    def test_bit_exact(self, strategy):
+        u, e, w, ks = _case(9, 3000, seed=67)
+        out = _agg_both(strategy, u, w, ks, residuals=e, gamma=5.0)
+        np.testing.assert_array_equal(np.asarray(out[True][0]),
+                                      np.asarray(out[False][0]))
+        np.testing.assert_array_equal(np.asarray(out[True][1]),
+                                      np.asarray(out[False][1]))
+
+    @pytest.mark.parametrize("strategy", CODEC_STRATEGIES)
+    def test_bit_exact_with_active_padding(self, strategy):
+        c_act, c_pad, n = 5, 3, 2048
+        u, e, w, ks = _case(c_act + c_pad, n, seed=68)
+        active = jnp.asarray([True] * c_act + [False] * c_pad)
+        u = u * active[:, None]
+        w = jnp.where(active, w, 0.0)
+        out = _agg_both(strategy, u, w, ks, residuals=e, active=active,
+                        gamma=3.0, overlap_d=2)
+        np.testing.assert_array_equal(np.asarray(out[True][0]),
+                                      np.asarray(out[False][0]))
+        np.testing.assert_array_equal(np.asarray(out[True][1]),
+                                      np.asarray(out[False][1]))
+        # inactive rows' residuals pass through unchanged on both routes
+        np.testing.assert_array_equal(np.asarray(out[True][1][c_act:]),
+                                      np.asarray(e[c_act:]))
+
+    @pytest.mark.parametrize("strategy", CODEC_STRATEGIES)
+    def test_k_extremes_ties_and_zero_rows(self, strategy):
+        u, e, w, _ = _case(4, 1024, seed=69)
+        u = u.at[2].set(0.0)                    # zero row: codec scale 0
+        e = e.at[2].set(0.0)
+        u = u.at[3, :700].set(u[3, 0])          # ties at the threshold
+        ks = jnp.asarray([1, 1024, 512, 700], jnp.int32)
+        out = _agg_both(strategy, u, w, ks, residuals=e)
+        np.testing.assert_array_equal(np.asarray(out[True][0]),
+                                      np.asarray(out[False][0]))
+        np.testing.assert_array_equal(np.asarray(out[True][1]),
+                                      np.asarray(out[False][1]))
+        # the zero row's residual stays exactly zero on both routes
+        assert not np.any(np.asarray(out[True][1][2]))
+
+
+class TestKernelPropertyCodec:
+    """Hypothesis sweep for the codec strategies: random shapes, per-client
+    ks, ties, zero rows, inactive masks — agg and residuals bit-exact.
+    Widths are even (see DESIGN.md §10: XLA:CPU's gemv accumulates the tail
+    of small odd widths differently between the reference's [C, n] einsum
+    and the kernel's tile-aligned dot — for every kernel strategy, codec or
+    not — so odd widths are pinned at tile level, not end-to-end)."""
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(1, 10), st.integers(1, 750), st.integers(0, 10 ** 6),
+           st.sampled_from(CODEC_STRATEGIES))
+    def test_bit_exact_everywhere(self, c, half_n, seed, strategy):
+        n = 2 * half_n
+        rng = np.random.default_rng(seed)
+        u = rng.normal(size=(c, n)).astype(np.float32)
+        u *= 10.0 ** rng.integers(-12, 12, size=(c, 1)).astype(np.float32)
+        if rng.random() < 0.3:
+            u[rng.integers(c)] = 0.0               # all-zero row
+        if rng.random() < 0.3 and n > 3:
+            r = int(rng.integers(c))
+            u[r, : n // 2] = u[r, 0]               # ties at the threshold
+        ks = rng.integers(1, n + 1, size=c).astype(np.int32)
+        ks[rng.integers(c)] = 1
+        ks[rng.integers(c)] = n
+        e = (rng.normal(size=(c, n)) * 0.3).astype(np.float32)
+        active = None
+        if rng.random() < 0.5:
+            active = rng.random(c) < 0.7
+            active[rng.integers(c)] = True         # >= 1 active row
+            u *= active[:, None]
+            e = np.where(active[:, None], e, e * 0.5)
+        w = (rng.random(c) + 0.05).astype(np.float32)
+        out = _agg_both(strategy, jnp.asarray(u), jnp.asarray(w),
+                        jnp.asarray(ks), residuals=jnp.asarray(e),
+                        active=jnp.asarray(active) if active is not None
+                        else None)
+        np.testing.assert_array_equal(np.asarray(out[True][0]),
+                                      np.asarray(out[False][0]))
+        np.testing.assert_array_equal(np.asarray(out[True][1]),
+                                      np.asarray(out[False][1]))
+
+
+class TestCodecKernelRoutedScanSim:
+    """The codec kernel route through the scanned driver: one compile, and
+    the whole trajectory bit-exact with the jnp-routed scan."""
+
+    def test_one_compile_and_parity(self):
+        from repro.core.aggregation import AggregationConfig
+        from repro.fed.simulation import FLSimConfig, run_fl
+        cfg = FLSimConfig(rounds=4, n_clients=6, n_train=1200, n_test=300,
+                          dim=32, hidden=32, n_classes=5, eval_every=2,
+                          seed=3)
+        accs = {}
+        for use_kernel in (False, True):
+            acfg = AggregationConfig(strategy="qtopk", cr=0.1,
+                                     use_kernel=use_kernel)
+            before = sum(engine.TRACE_COUNTS.values())
+            res = run_fl(cfg, acfg, engine="scan")
+            assert sum(engine.TRACE_COUNTS.values()) - before == 1
+            accs[use_kernel] = np.array([a for _, a in res.accuracies])
+        np.testing.assert_array_equal(accs[True], accs[False])

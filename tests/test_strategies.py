@@ -462,12 +462,26 @@ class TestRegistration:
                 value_codec=strategies.int8_symmetric_codec,
                 megakernel=False))
 
-    def test_codec_refuses_megakernel(self):
-        with pytest.raises(ValueError, match="megakernel=False"):
+    def test_codec_megakernel_needs_kernel_codec(self):
+        """value_codec + megakernel=True is only legal when the codec has a
+        registered kernel lowering (fused_merge's dequantization stage)."""
+        with pytest.raises(ValueError, match="kernel_codec"):
             strategies.register(strategies.Strategy(
                 name="x", carry="ef",
                 value_codec=strategies.int8_symmetric_codec,
                 megakernel=True))
+
+    def test_kernel_codec_requires_value_codec(self):
+        with pytest.raises(ValueError, match="value_codec"):
+            strategies.register(strategies.Strategy(
+                name="x", carry="ef", kernel_codec="int8"))
+
+    def test_unknown_kernel_codec_refused(self):
+        with pytest.raises(ValueError, match="unknown kernel_codec"):
+            strategies.register(strategies.Strategy(
+                name="x", carry="ef",
+                value_codec=strategies.int8_symmetric_codec,
+                kernel_codec="fp8", megakernel=True))
 
     def test_dense_selector_needs_dense_wire(self):
         with pytest.raises(ValueError, match="dense wire"):
@@ -716,3 +730,125 @@ class TestQtopk:
                                           jnp.full((2,), 0.5))
         assert np.isfinite(float(out["loss"]))
         assert float(jnp.abs(jax.tree.leaves(new_state["ef"])[0]).sum()) > 0.0
+
+
+class TestCodecNumerics:
+    """satellite coverage for the shared quantization op sequence: the
+    zero-row path, the elementwise round-trip bound, and the exact-product
+    scale rounding that makes the kernel route fma-immune."""
+
+    def test_scale_mantissa_bits(self):
+        # 23 - ceil(log2(levels + 1)): q in [-levels, levels] has
+        # <= ceil(log2(levels+1)) + 1 significand bits, so q * scale fits
+        # f32's 24 exactly
+        assert strategies.scale_mantissa_bits(127.0) == 16
+        assert strategies.scale_mantissa_bits(7.0) == 20
+
+    def test_zero_rows_dequantize_to_exact_zeros(self):
+        # the old 1e-30 scale floor is gone: an all-zero row has scale 0 and
+        # the safe-divisor where() keeps every output exactly 0.0
+        v = jnp.zeros((3, 64), jnp.float32)
+        mask = jnp.zeros((3, 64), bool)
+        for codec in (strategies.int8_symmetric_codec,
+                      strategies.int4_symmetric_codec):
+            out = np.asarray(codec(v, mask))
+            assert not np.any(out)
+            assert not np.signbit(out).any()
+
+    def test_mixed_zero_and_live_rows(self):
+        rng = np.random.default_rng(11)
+        v = rng.normal(size=(4, 128)).astype(np.float32)
+        v[2] = 0.0
+        deq = np.asarray(strategies.int4_symmetric_codec(
+            jnp.asarray(v), jnp.asarray(v) != 0))
+        assert not np.any(deq[2])
+        assert np.any(deq[[0, 1, 3]])
+
+    @pytest.mark.parametrize("codec_name", ["int8", "int4"])
+    def test_roundtrip_error_at_most_half_step_elementwise(self, codec_name):
+        # |dequant(v) - v| <= scale/2 elementwise, with the documented
+        # <= 2^-16-relative scale slack from quantization_scale's
+        # reciprocal-multiply + mantissa rounding (clip at the grid edge
+        # turns that scale perturbation into levels * |dscale| of error)
+        levels = strategies.CODEC_LEVELS[codec_name]
+        fn = (strategies.int8_symmetric_codec if codec_name == "int8"
+              else strategies.int4_symmetric_codec)
+        for seed in range(25):
+            rng = np.random.default_rng(seed)
+            c, n = int(rng.integers(1, 6)), int(rng.integers(1, 400))
+            v = rng.normal(size=(c, n)).astype(np.float32)
+            v *= 10.0 ** rng.integers(-10, 10, size=(c, 1)).astype(np.float32)
+            v[rng.random(size=(c, n)) < 0.5] = 0.0
+            if rng.random() < 0.3:
+                v[rng.integers(c)] = 0.0
+            vj = jnp.asarray(v)
+            deq = np.asarray(fn(vj, vj != 0))
+            absmax = np.abs(v).max(axis=1, keepdims=True)
+            scale = np.asarray(strategies.quantization_scale(
+                jnp.asarray(absmax), levels))
+            bound = scale / 2.0 + absmax * 2.0 ** -15
+            assert np.all(np.abs(deq - v) <= bound), seed
+            # non-survivors (exact zeros) never leak value
+            np.testing.assert_array_equal(deq[v == 0.0], 0.0)
+
+    def test_quantization_scale_products_are_exact_in_f32(self):
+        # the whole point of the mantissa rounding: every q * scale is
+        # exactly representable, so fma contraction and mul-then-sub agree
+        # under any lowering — verified against float64 ground truth
+        rng = np.random.default_rng(12)
+        absmax = jnp.asarray(
+            (rng.random(4096).astype(np.float32) + 1e-6)
+            * 10.0 ** rng.integers(-30, 30, size=4096).astype(np.float32))
+        for levels in strategies.CODEC_LEVELS.values():
+            scale = np.asarray(strategies.quantization_scale(absmax, levels))
+            qs = np.arange(-levels, levels + 1, dtype=np.float32)
+            prod32 = qs[None, :] * scale[:, None]
+            prod64 = qs[None, :].astype(np.float64) * scale[:, None]
+            np.testing.assert_array_equal(prod32.astype(np.float64), prod64)
+
+
+class TestInt4Strategy:
+    """Registration sanity + wire accounting for the int4 plugin and the
+    bitmask wire formats that ride along."""
+
+    def test_registered_capabilities(self):
+        s = strategies.get("int4")
+        assert s.carry == "ef" and s.selector == "topk"
+        assert s.value_codec is strategies.int4_symmetric_codec
+        assert s.megakernel and s.kernel_codec == "int4"
+        assert s.wire is strategies.PACKED_INT4
+        q = strategies.get("qtopk")
+        assert q.megakernel and q.kernel_codec == "int8"
+
+    def test_packed_int4_bytes_on_wire(self):
+        # idx32 + int4 + scale32: 4k + 0.5k + 4
+        assert strategies.PACKED_INT4.bytes_on_wire(1000, 10) == 49.0
+        # vs the idx32 + f32 reference pair's 8k = 80: the 9/16 ratio
+        assert strategies.PACKED_INT4.bytes_on_wire(10 ** 6, 10 ** 5) \
+            / strategies.SPARSE32.bytes_on_wire(10 ** 6, 10 ** 5) \
+            == pytest.approx(9.0 / 16.0, rel=1e-4)
+
+    def test_bitmask_bytes_on_wire(self):
+        # bitmask + int8 + scale32: n/8 + 1k + 4
+        assert strategies.BITMASK_INT8.bytes_on_wire(1000, 10) == 139.0
+        # bitmask + int4 + scale32: n/8 + 0.5k + 4
+        assert strategies.BITMASK_INT4.bytes_on_wire(1000, 10) == 134.0
+        # dense-ish selection: the 1-bit mask beats 4-byte indices when
+        # k/n > 1/32
+        n = 10 ** 5
+        for k in (n // 10, n // 5):
+            assert strategies.BITMASK_INT8.bytes_on_wire(n, k) \
+                < strategies.PACKED_INT8.bytes_on_wire(n, k)
+        assert strategies.BITMASK_INT8.bytes_on_wire(n, n // 100) \
+            > strategies.PACKED_INT8.bytes_on_wire(n, n // 100)
+
+    def test_cr_eff_prices_exact_wire_bytes(self):
+        # comm_time's 2x factor charges 8 * n * cr bytes for the reference
+        # pair, so cr_eff is DEFINED by 8 * n * cr_eff == bytes_on_wire
+        n = 10 ** 6
+        for wf in (strategies.PACKED_INT4, strategies.BITMASK_INT8,
+                   strategies.BITMASK_INT4):
+            for k in (10, 10 ** 4, 10 ** 5):
+                eff = wf.cr_eff(k / n, n)
+                np.testing.assert_allclose(8.0 * n * float(eff),
+                                           wf.bytes_on_wire(n, k), rtol=1e-9)

@@ -10,10 +10,14 @@ Tables are replaced between marker comments::
 
     <!-- registry:strategies:begin --> ... <!-- registry:strategies:end -->
     <!-- registry:engines:begin -->    ... <!-- registry:engines:end -->
+    <!-- registry:kernels:begin -->    ... <!-- registry:kernels:end -->
 
 The strategies table is rendered straight from the registered capability
 records; the engines table lists the registry's consumers (every engine
-dispatches on capabilities only — enforced by tools/check_strategy_enum.py).
+dispatches on capabilities only — enforced by tools/check_strategy_enum.py);
+the kernels table prices every megakernel-capable strategy's HBM passes
+(repro.roofline.kernel_bytes analytic DMA model) and wire stream against
+the idx32+f32 reference pair.
 """
 from __future__ import annotations
 
@@ -73,11 +77,46 @@ def strategies_table() -> str:
             f"`{s.value_codec.__name__}`" if s.value_codec else "—",
             s.weighting + (" + OPWA" if s.overlap_weighted else ""),
             s.wire.kind,
-            "yes" if s.megakernel else "no",
+            ("yes" + (f" ({s.kernel_codec} codec)" if s.kernel_codec else "")
+             if s.megakernel else "no"),
             s.description,
         ])
     return _table(["name", "carry", "selector", "value codec", "weighting",
                    "wire format", "megakernel", "description"], rows)
+
+
+#: representative merge shape for the kernels table (matches the largest
+#: BENCH_kernels.json cell) and the survivor fraction the wire column is
+#: priced at
+KERNEL_TABLE_SHAPE = (32, 65536)
+KERNEL_TABLE_CR = 0.1
+
+
+def kernels_table() -> str:
+    from repro.roofline import megakernel_hbm_bytes, wire_stream_bytes
+    c, n = KERNEL_TABLE_SHAPE
+    k = int(n * KERNEL_TABLE_CR)
+    rows = []
+    for name in strategies.names():
+        s = strategies.get(name)
+        if not s.megakernel:
+            continue
+        hbm = megakernel_hbm_bytes(c, n, name)
+        wire = wire_stream_bytes(name, n, k)
+        rows.append([
+            f"`{name}`",
+            f"{hbm['passes']:.1f}",
+            "—" if s.kernel_codec is None
+            else f"`{s.kernel_codec}` ([C, 1] scale column)",
+            wire["kind"],
+            ("1" if wire["pair_ratio"] == 1.0
+             else f"**{wire['pair_bytes']:g}/8**"),
+            f"{wire['total_ratio']:.3f}",
+        ])
+    return _table(
+        [f"strategy (C={c}, n={n})", "kernel HBM passes", "kernel codec",
+         "wire format", "survivor bytes vs idx32+f32",
+         f"total wire ratio @ cr={KERNEL_TABLE_CR:g}"], rows)
 
 
 def engines_table() -> str:
@@ -103,6 +142,7 @@ def main() -> int:
     old = readme.read_text()
     new = splice(old, "strategies", strategies_table())
     new = splice(new, "engines", engines_table())
+    new = splice(new, "kernels", kernels_table())
     if args.check:
         if new != old:
             print("README tables are stale — run "
