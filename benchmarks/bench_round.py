@@ -6,6 +6,7 @@ plus the multi-round dimension (fused per-round dispatch vs the ONE-compile
     PYTHONPATH=src python -m benchmarks.bench_round --sim-scan [--fast]
     PYTHONPATH=src python -m benchmarks.bench_round --kernels [--fast]
     PYTHONPATH=src python -m benchmarks.bench_round --mesh-scan [--fast]
+    PYTHONPATH=src python -m benchmarks.bench_round --async [--fast]
 
 For each (strategy, cohort size K) cell it runs the same seeded simulation
 through both engines, times steady-state rounds (first round excluded as
@@ -616,6 +617,134 @@ def run_population(fast: bool = False,
     return doc
 
 
+# ------------------------------------------------------------ async engine
+#: (label, bandwidth sd in Mbps around the 1.0 mean) — the floor clip at
+#: 0.05 Mbps turns the high-sd draw into a long-tailed straggler mix
+ASYNC_MIXES = (("mild", 0.2), ("extreme", 0.8))
+ASYNC_STRATEGY = "eftopk"
+ASYNC_PFAIL = 0.1
+
+
+def _time_to_target(res, target: float) -> float:
+    """Virtual seconds of simulated communication until the accuracy
+    trajectory first crosses ``target`` (inf if it never does)."""
+    cum = np.cumsum([t.actual for t in res.times.per_round])
+    by_round = {r: i for i, r in enumerate(res.executed_rounds)}
+    for r, acc in res.accuracies:
+        if acc >= target:
+            return float(cum[by_round[r]])
+    return float("inf")
+
+
+def run_async_bench(fast: bool = False, out_path: str = "BENCH_async.json",
+                    strategy: str = ASYNC_STRATEGY) -> dict:
+    """Time-to-target-accuracy: synchronous deadline-drop vs async FedBuff.
+
+    Per bandwidth mix, the same seeded experiment (dataset, partition,
+    links, model init) runs through (a) the scan engine with the standard
+    straggler mitigation — over-select, aggregate the first C·N arrivals,
+    drop the rest at the deadline — plus round-level client failures, and
+    (b) the async buffered engine with per-upload mid-transfer failures at
+    the same rate. The metric is virtual communication time to reach 90%
+    of the weaker run's best accuracy: the sync round is priced at the
+    equalized-arrival duration of the aggregated set, the async flush at
+    the event-loop time between flushes. The claim under test (the check
+    gate): with a long-tailed bandwidth mix and failures, buffering K fast
+    arrivals beats waiting on the deadline in >=1 mix.
+
+    A ``chaos`` section smoke-tests the fault path at p_fail=0.6 with a
+    tight per-upload timeout and a stall deadline (forced partial flushes):
+    the run must complete every flush with ONE merge compile."""
+    from repro.fed import async_engine
+    from repro.ft.failures import FailureInjector
+    from repro.ft.straggler import StragglerPolicy
+
+    rounds = 12 if fast else 24
+    # P=20 at 25% participation: the sync cohort is 5, and the async loop
+    # over-provisions to M = min(2K, P - K) = 10 in flight per K=5-slot
+    # buffer — the FedBuff regime (first K of M arrivals flush; a cohort-
+    # sized population would pin M = K and the buffer would wait on its
+    # slowest dispatch exactly like a sync round)
+    # beta=5 keeps the Dirichlet partition mild: the heterogeneity under
+    # test is the LINK mix, and min_size=batch must stay satisfiable for
+    # 20 clients (beta=0.1 would resample forever at this n_train)
+    # dataset size fixed across --fast: more data per client makes the MLP
+    # converge inside async's pipeline-fill phase and the metric stops
+    # resolving the steady state; the full mode only extends the horizon
+    base = dict(rounds=rounds, n_clients=20, participation=0.25,
+                batch_size=16, beta=5.0, n_train=2000, n_test=500,
+                eval_every=1, seed=3)
+    acfg = AggregationConfig(strategy=strategy, cr=0.05)
+    results = []
+    for label, bw_sd in ASYNC_MIXES:
+        sim_sync = FLSimConfig(**base, link_bw_sd_mbps=bw_sd)
+        res_sync = run_fl(sim_sync, acfg, engine="scan",
+                          failure=FailureInjector(p_fail=ASYNC_PFAIL,
+                                                  seed=base["seed"]),
+                          straggler=StragglerPolicy())
+        sim_async = FLSimConfig(**base, link_bw_sd_mbps=bw_sd,
+                                async_p_fail_upload=ASYNC_PFAIL,
+                                async_upload_timeout_s=600.0)
+        res_async = run_fl(sim_async, acfg, engine="async")
+        best_sync = max(a for _, a in res_sync.accuracies)
+        best_async = max(a for _, a in res_async.accuracies)
+        target = 0.9 * min(best_sync, best_async)
+        t_sync = _time_to_target(res_sync, target)
+        t_async = _time_to_target(res_async, target)
+        cell = {
+            "mix": label, "bw_sd_mbps": bw_sd, "p_fail": ASYNC_PFAIL,
+            "target_accuracy": target,
+            "sync": {"time_to_target_s": t_sync,
+                     "total_comm_s": float(res_sync.times.actual),
+                     "best_accuracy": best_sync},
+            "async": {"time_to_target_s": t_async,
+                      "total_comm_s": float(res_async.times.actual),
+                      "best_accuracy": best_async},
+            "speedup_time_to_target": t_sync / t_async,
+        }
+        results.append(cell)
+        print(f"{label:<8} sd={bw_sd:.1f}  target {target:.3f}  "
+              f"sync {t_sync:8.1f}s  async {t_async:8.1f}s  "
+              f"speedup {cell['speedup_time_to_target']:.2f}x")
+
+    # chaos smoke: heavy failures + tight timeout + stall deadline
+    before = async_engine.TRACE_COUNTS[("async_merge", strategy)]
+    sim_chaos = FLSimConfig(**base, link_bw_sd_mbps=0.8,
+                            async_p_fail_upload=0.6, async_max_attempts=2,
+                            async_upload_timeout_s=120.0,
+                            async_stall_s=20.0)
+    res_chaos = run_fl(sim_chaos, acfg, engine="async")
+    durs = [t.actual for t in res_chaos.times.per_round]
+    chaos = {
+        "p_fail": 0.6, "max_attempts": 2, "timeout_s": 120.0,
+        "stall_s": 20.0,
+        "completed": len(res_chaos.executed_rounds) == rounds,
+        "merge_traces": async_engine.TRACE_COUNTS[("async_merge", strategy)]
+        - before,
+        "flush_durations_nonnegative": bool(all(d >= 0 for d in durs)),
+        "final_accuracy": res_chaos.final_accuracy,
+    }
+    print(f"chaos    p_fail=0.6 timeout=120s stall=20s: "
+          f"{len(res_chaos.executed_rounds)}/{rounds} flushes, "
+          f"{chaos['merge_traces']} merge trace(s), "
+          f"acc {chaos['final_accuracy']:.3f}")
+
+    doc = {
+        "schema": "bench_async/v1",
+        "env": {"platform": jax.devices()[0].platform,
+                "jax": jax.__version__,
+                "cpu_count": os.cpu_count()},
+        "config": {"strategy": strategy, "rounds": rounds, "cr": 0.05,
+                   "p_fail": ASYNC_PFAIL, "fast": fast},
+        "results": results,
+        "chaos": chaos,
+    }
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"wrote {out_path}")
+    return doc
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
@@ -638,6 +767,11 @@ def main() -> int:
                     help="benchmark the traced-k Pallas megakernel pipeline "
                          "vs the unfused merge (roofline HBM bytes + "
                          "wall-clock + parity) and write BENCH_kernels.json")
+    ap.add_argument("--async", dest="async_bench", action="store_true",
+                    help="sync deadline-drop vs the async buffered engine "
+                         "on time-to-target-accuracy over heterogeneous-"
+                         "bandwidth mixes with upload failures, plus a "
+                         "chaos smoke; writes BENCH_async.json")
     ap.add_argument("--population", action="store_true",
                     help="sweep the streaming-cohort engine over P = "
                          "10^3..10^6 registered clients (--fast: 10^3/10^4) "
@@ -649,7 +783,10 @@ def main() -> int:
                          "bit-exact, >=3x HBM traffic reduction, and a "
                          "1-compile kernel-routed scan; with --population: "
                          "wall-clock and peak state bytes <=1.25x the "
-                         "smallest P, one compile across the sweep)")
+                         "smallest P, one compile across the sweep; with "
+                         "--async: async wins time-to-target in >=1 mix "
+                         "and the chaos run completes with 1 merge "
+                         "compile)")
     args = ap.parse_args()
     if args.strategy is not None:
         global STRATEGIES, SCAN_STRATEGIES, MESH_STRATEGIES, KERNEL_STRATEGIES
@@ -660,6 +797,25 @@ def main() -> int:
         only = (args.strategy,)
         STRATEGIES = SCAN_STRATEGIES = MESH_STRATEGIES = KERNEL_STRATEGIES = \
             only
+    if args.async_bench:
+        out = ("BENCH_async.json" if args.out == "BENCH_round.json"
+               else args.out)
+        strategy = args.strategy or ASYNC_STRATEGY
+        doc = run_async_bench(fast=args.fast, out_path=out,
+                              strategy=strategy)
+        if args.check:
+            wins = [c["mix"] for c in doc["results"]
+                    if c["speedup_time_to_target"] > 1.0]
+            ch = doc["chaos"]
+            if (not wins or not ch["completed"] or ch["merge_traces"] != 1
+                    or not ch["flush_durations_nonnegative"]):
+                print(f"FAIL: async check (wins {wins}, chaos "
+                      f"completed={ch['completed']} "
+                      f"traces={ch['merge_traces']})")
+                return 1
+            print(f"OK: async beats sync deadline-drop on time-to-target "
+                  f"in {wins}; chaos run completed, 1 merge compile")
+        return 0
     if args.population:
         out = ("BENCH_population.json" if args.out == "BENCH_round.json"
                else args.out)

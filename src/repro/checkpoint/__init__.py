@@ -1,4 +1,6 @@
 from repro.checkpoint.checkpointer import (LayoutMismatch, latest_step,
-                                           list_steps, restore, save)
+                                           list_steps, restore,
+                                           restore_latest_valid, save)
 
-__all__ = ["save", "restore", "latest_step", "list_steps", "LayoutMismatch"]
+__all__ = ["save", "restore", "restore_latest_valid", "latest_step",
+           "list_steps", "LayoutMismatch"]

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import os
 import re
+import warnings
 import zlib
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -107,6 +108,59 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def _load_validated(path: str) -> Dict[str, Any]:
+    """Read + integrity-validate one checkpoint file. Any way a file can be
+    broken on disk — truncated mid-write, garbled payload, wrong structure,
+    or failing the CRC32 digest — surfaces as a single ``IOError`` here, so
+    ``restore_latest_valid`` has one exception class that means "this file
+    is corrupt" as opposed to "this file disagrees with your config"
+    (``ValueError`` / ``LayoutMismatch``, which must never be masked)."""
+    try:
+        with open(path, "rb") as f:
+            payload = msgpack.unpackb(f.read(), raw=False)
+        if (not isinstance(payload, dict) or "crc32" not in payload
+                or "leaves" not in payload or "step" not in payload):
+            raise IOError(f"checkpoint {path} has a malformed payload")
+        crc = 0
+        for key in sorted(payload["leaves"]):
+            crc = zlib.crc32(payload["leaves"][key]["data"], crc)
+        if crc != payload["crc32"]:
+            raise IOError(f"checkpoint {path} failed CRC32 integrity check")
+    except IOError:
+        raise
+    except Exception as e:   # msgpack unpack errors on truncated/garbled data
+        raise IOError(f"checkpoint {path} is unreadable: {e}") from e
+    return payload
+
+
+def restore_latest_valid(ckpt_dir: str, like, strict: bool = True
+                         ) -> Tuple[Any, int, dict]:
+    """``restore`` that degrades gracefully on corruption: walk the steps
+    newest-first and restore the newest file that passes integrity
+    validation, warning (not crashing) about each corrupt one skipped. A
+    torn ``save`` cannot corrupt older steps (atomic ``os.replace`` + one
+    file per step), so falling back one step recovers the run at the cost
+    of the lost tail. Raises ``FileNotFoundError`` only when no intact
+    checkpoint exists at all; config mismatches (``ValueError`` /
+    ``LayoutMismatch``) still propagate — they mean every file would
+    disagree with the caller, not that the newest is damaged."""
+    steps = list_steps(ckpt_dir)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    for step in reversed(steps):
+        path = os.path.join(ckpt_dir, f"step_{step}.msgpack")
+        try:
+            _load_validated(path)
+        except IOError as e:
+            warnings.warn(f"skipping corrupt checkpoint {path}: {e}",
+                          RuntimeWarning, stacklevel=2)
+            continue
+        return restore(ckpt_dir, like, step=step, strict=strict)
+    raise FileNotFoundError(
+        f"all {len(steps)} checkpoints in {ckpt_dir} failed integrity "
+        f"validation")
+
+
 def restore(ckpt_dir: str, like, step: Optional[int] = None,
             strict: bool = True) -> Tuple[Any, int, dict]:
     """Restore into the structure of ``like``. Returns (tree, step, extra).
@@ -127,13 +181,7 @@ def restore(ckpt_dir: str, like, step: Optional[int] = None,
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
     path = os.path.join(ckpt_dir, f"step_{step}.msgpack")
-    with open(path, "rb") as f:
-        payload = msgpack.unpackb(f.read(), raw=False)
-    crc = 0
-    for key in sorted(payload["leaves"]):
-        crc = zlib.crc32(payload["leaves"][key]["data"], crc)
-    if crc != payload["crc32"]:
-        raise IOError(f"checkpoint {path} failed CRC32 integrity check")
+    payload = _load_validated(path)
     leaves_p, treedef = jax.tree_util.tree_flatten_with_path(like)
     out = []
     matched = 0

@@ -71,6 +71,21 @@ def client_coefficients(data_fracs: np.ndarray, crs: np.ndarray, alpha: float,
     return data_fracs / np.maximum(data_fracs, ncr) * alpha
 
 
+def staleness_discount(weights: np.ndarray, staleness: np.ndarray,
+                       alpha: float) -> np.ndarray:
+    """FedBuff-style staleness discount on averaging coefficients:
+    ``w_i / (1 + s_i)^alpha`` where ``s_i`` is how many server versions
+    elapsed between the client's dispatch and its merge. Lives next to the
+    Eq. 6 coefficient math because it composes with it: the async buffered
+    engine feeds BCRS/data coefficients through this before the merge.
+    ``alpha = 0`` is the identity (discount disabled); larger alpha
+    downweights stale updates harder. Monotone non-increasing in staleness
+    for alpha >= 0 (asserted in tests/test_async_engine.py)."""
+    w = np.asarray(weights, np.float64)
+    s = np.asarray(staleness, np.float64)
+    return w / np.power(1.0 + s, alpha)
+
+
 @dataclass
 class BCRSSchedule:
     crs: np.ndarray           # per-client compression ratio

@@ -93,3 +93,79 @@ def uncompressed_round(links: Sequence[ClientLink], v_bytes: float) -> RoundTime
     ts = [l.latency_s + 8.0 * v_bytes / l.bandwidth_bps for l in links]
     return RoundTime(actual=float(np.max(ts)), max=float(np.max(ts)),
                      min=float(np.min(ts)))
+
+
+# ------------------------------------------------------ fault-tolerant uploads
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Retry discipline for a single client upload in the async engine.
+
+    An attempt that fails mid-transfer is resumed from its byte offset after
+    an exponential backoff (``backoff_s * backoff_factor**(attempt-1)``), so
+    the payload crosses the wire exactly once no matter how many attempts it
+    takes — only the per-attempt latency and the backoff sleeps are re-paid.
+    ``timeout_s`` is a hard wall-clock deadline measured from dispatch;
+    ``max_attempts`` caps the retries. Either bound aborts the upload."""
+    max_attempts: int = 3
+    backoff_s: float = 0.5
+    backoff_factor: float = 2.0
+    timeout_s: float = float("inf")
+
+
+def upload_time_with_retries(link: ClientLink, v_bytes: float, cr: float,
+                             fail_fracs: Sequence[float],
+                             policy: RetryPolicy) -> "UploadOutcome":
+    """Resolve one upload's full timeline given its failure draw.
+
+    ``fail_fracs[j]`` is the fraction of the *remaining* payload transferred
+    before attempt ``j+1`` failed; attempts beyond ``len(fail_fracs)`` run
+    clean. With resume-from-offset the transfer term ``2*V_bits*cr/B`` is
+    paid once total, split across attempts; latency is paid per attempt and
+    backoff between attempts. The outcome is clipped against
+    ``policy.timeout_s`` (timed out mid-flight) and ``policy.max_attempts``
+    (aborted after the last failure's backoff is NOT waited out)."""
+    v_bits = 8.0 * v_bytes
+    transfer_s = 2.0 * v_bits * cr / link.bandwidth_bps
+    t = 0.0
+    progress = 0.0            # fraction of the payload already delivered
+    for attempt in range(1, policy.max_attempts + 1):
+        remaining_s = (1.0 - progress) * transfer_s
+        if attempt <= len(fail_fracs):
+            frac = float(fail_fracs[attempt - 1])
+            t_fail = t + link.latency_s + frac * remaining_s
+            progress += frac * (1.0 - progress)
+            if t_fail >= policy.timeout_s:
+                return UploadOutcome(arrived=False, t_resolve=policy.timeout_s,
+                                     attempts=attempt, progress=progress,
+                                     timed_out=True)
+            if attempt == policy.max_attempts:
+                return UploadOutcome(arrived=False, t_resolve=t_fail,
+                                     attempts=attempt, progress=progress,
+                                     timed_out=False)
+            t = t_fail + policy.backoff_s * policy.backoff_factor ** (attempt - 1)
+            if t >= policy.timeout_s:
+                return UploadOutcome(arrived=False, t_resolve=policy.timeout_s,
+                                     attempts=attempt, progress=progress,
+                                     timed_out=True)
+        else:
+            t_done = t + link.latency_s + remaining_s
+            if t_done > policy.timeout_s:
+                return UploadOutcome(arrived=False, t_resolve=policy.timeout_s,
+                                     attempts=attempt, progress=progress,
+                                     timed_out=True)
+            return UploadOutcome(arrived=True, t_resolve=t_done,
+                                 attempts=attempt, progress=1.0,
+                                 timed_out=False)
+    # unreachable: the loop always returns by attempt == max_attempts
+    raise AssertionError("retry loop fell through")  # pragma: no cover
+
+
+@dataclass(frozen=True)
+class UploadOutcome:
+    """Resolved timeline of one upload: did it land, when, after how many
+    attempts, and how much of the payload made it across the wire."""
+    arrived: bool
+    t_resolve: float          # seconds after dispatch
+    attempts: int
+    progress: float           # delivered payload fraction in [0, 1]
+    timed_out: bool

@@ -1,0 +1,594 @@
+"""FedBuff-style asynchronous buffered-aggregation engine (``engine="async"``).
+
+Clients train against whatever server version is current when they are
+dispatched; their updates stream back through a fault-tolerant arrival
+process (``ft.arrivals``: mid-transfer failures, resume-from-offset retries,
+exponential backoff, per-upload deadlines) into a K-slot buffer. When the
+buffer fills — or stalls past a configurable deadline and flushes partially —
+the server merges it in ONE compiled program: the same
+``engine.aggregate_updates`` substrate every synchronous engine uses, fed
+staleness-discounted coefficients (``w_i / (1 + s_i)^alpha``,
+``core.bcrs.staleness_discount``) so updates computed against old versions
+count less. OPWA overlap counts and EF residuals work unchanged: residuals
+live in a per-client ``[P + 1, n]`` host store (sentinel row P, the pop_scan
+convention) gathered/scattered by buffer slot, so ``carry="ef"`` strategies
+stay bit-exact per client no matter how dispatches and arrivals interleave.
+
+Crash safety: every piece of loop state — params, the residual store, buffer
+contents, in-flight uploads (including their already-computed updates and
+retry timelines), and the dispatch/selection counters — checkpoints through
+``repro.checkpoint`` at flush boundaries. All randomness is counter-based
+(``np.random.default_rng((seed, tag, counter))``), so restoring the counters
+reproduces the exact future: a crash-restarted run is bit-identical to an
+uninterrupted one.
+
+Degenerate configuration = synchronous parity anchor: with arrivals forced
+synchronous (``async_sync_arrivals``), buffer size = cohort size, and zero
+staleness (by construction), the engine replays the scan engine's host plans
+through the same two compiled programs and reproduces its trajectory
+(pop_scan's, for per-client-EF strategies).
+"""
+from __future__ import annotations
+
+import collections
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bcrs as bcrs_mod
+from repro.core import cost_model
+from repro.fed import engine as engine_mod
+from repro.ft.arrivals import ArrivalProcess, BATCH_TAG
+from repro.ft.straggler import renormalize_coefficients
+
+#: trace counters keyed ("async_train" | "async_merge", strategy) — tests
+#: assert the buffer-merge program compiles exactly once per run
+TRACE_COUNTS: collections.Counter = collections.Counter()
+
+#: rng-stream tag for free-client selection draws (pinned; keyed on the
+#: dispatch counter, so selection needs no extra checkpoint state)
+SELECT_TAG = 27_449
+
+
+# ----------------------------------------------------- compiled programs
+class AsyncTrainStep:
+    """Jitted local-training program: flat params + a batch plan for C slots
+    -> stacked flat client deltas [C, n]. Same arithmetic as the scanned
+    engines' in-loop training (vmapped masked SGD over gathered batches)."""
+
+    def __init__(self, fn, strategy: str):
+        self._fn = fn
+        self.strategy = strategy
+
+    def __call__(self, flat, x):
+        return self._fn(flat, x)
+
+
+def make_async_train_step(loss_fn: Callable, params_template, *, lr: float,
+                          make_batches: Callable,
+                          strategy: str = "") -> AsyncTrainStep:
+    unflatten = engine_mod.make_unflatten(params_template)
+    local_train = engine_mod.make_masked_local_trainer(loss_fn, lr)
+
+    def _train(flat, x):
+        TRACE_COUNTS[("async_train", strategy)] += 1
+        params = unflatten(flat)
+        deltas, _losses = jax.vmap(local_train, in_axes=(None, 0, 0))(
+            params, make_batches(x), x["step_mask"])
+        return engine_mod.flatten_client_trees(deltas)
+
+    return AsyncTrainStep(jax.jit(_train), strategy)
+
+
+class AsyncMergeStep:
+    """Jitted buffer-merge program (the ONE compiled merge per run): K
+    buffered flat updates + staleness-discounted weights + per-slot EF
+    residual rows -> new flat params + new residual rows."""
+
+    def __init__(self, fn, spec):
+        self._fn = fn
+        self.spec = spec
+
+    def __call__(self, flat, residuals, x):
+        return self._fn(flat, residuals, x)
+
+
+def make_async_merge_step(acfg, *, eta: float = 1.0) -> AsyncMergeStep:
+    spec = engine_mod.spec_for(acfg)
+    ef = spec.needs_residuals
+
+    def _merge(flat, residuals, x):
+        TRACE_COUNTS[("async_merge", spec.strategy)] += 1
+        agg, new_res = engine_mod.aggregate_updates(
+            spec, x["updates"], x["weights"], x["ks"],
+            residuals=residuals if ef else None, active=x["active"])
+        return {"flat": flat - eta * agg,
+                "residuals": new_res if ef else residuals}
+
+    fn = jax.jit(_merge, donate_argnums=(0, 1) if ef else (0,))
+    return AsyncMergeStep(fn, spec)
+
+
+# -------------------------------------------------------- flush weighting
+def flush_weights(member_ids, member_staleness, pending_ids,
+                  pending_staleness, *, buffer_k: int, alpha: float,
+                  coeff_table: Optional[np.ndarray] = None,
+                  fracs_all: Optional[np.ndarray] = None) -> np.ndarray:
+    """Final merge coefficients for the ``m`` filled buffer slots.
+
+    Every slot — filled or not — gets the staleness-discounted coefficient
+    of its (actual or expected) occupant: filled slots their buffered
+    client, unfilled slots the next in-flight uploads the buffer was
+    waiting for when it stalled. ``renormalize_coefficients`` then folds
+    the missing slots' mass onto the arrived ones, so a partial flush takes
+    the same total step magnitude the full buffer would have (the invariant
+    tests/test_async_engine.py asserts). A full flush renormalizes to
+    itself — the discounted coefficients pass through untouched.
+
+    ``coeff_table`` (whole-population Eq. 6 coefficients) serves
+    bcrs-weighted strategies, the ``run_fl_traced`` convention; otherwise
+    data fractions are normalized over the slots' occupants."""
+    ids = np.concatenate([np.asarray(member_ids, np.int64),
+                          np.asarray(pending_ids, np.int64)])[:buffer_k]
+    stal = np.concatenate([np.asarray(member_staleness, np.float64),
+                           np.asarray(pending_staleness, np.float64)
+                           ])[:buffer_k]
+    if coeff_table is not None:
+        base = np.asarray(coeff_table, np.float64)[ids]
+    else:
+        fr = np.asarray(fracs_all, np.float64)[ids]
+        base = fr / fr.sum()
+    disc = bcrs_mod.staleness_discount(base, stal, alpha)
+    coeffs_k = np.zeros((buffer_k,), np.float64)
+    coeffs_k[: len(ids)] = disc
+    arrived = np.zeros((buffer_k,), bool)
+    m = len(np.asarray(member_ids))
+    arrived[:m] = True
+    return renormalize_coefficients(coeffs_k, arrived)[:m]
+
+
+# ------------------------------------------------------- event-driven loop
+class BufferedAsyncLoop:
+    """The FedBuff event loop, generic over the model: drivers supply
+    ``train_update(client, uid, flat) -> np [n]`` (run local training
+    against the current params; all batch randomness MUST key on
+    ``(seed, BATCH_TAG, uid)`` so restarts replay it) and
+    ``on_flush(flush_idx, flat, rt)`` (eval/accounting). The loop owns
+    dispatch, the arrival process, the buffer, staleness weighting, the EF
+    residual store, and crash-safe checkpointing.
+
+    Virtual time: ``dispatch`` resolves each upload's full retry timeline
+    immediately; events pop in time order; a flush happens when the buffer
+    fills or — if a stall deadline is set — when the deadline passes with
+    the buffer partially full. In-flight concurrency is topped up to M
+    after every event; a client is busy from dispatch until its upload
+    aborts or its buffered update is flushed, so no client ever has two
+    updates in the pipeline (which is what keeps per-client EF exact)."""
+
+    def __init__(self, *, n_clients: int, n_params: int, buffer_k: int,
+                 concurrency: int, target_flushes: int, seed: int,
+                 alpha: float, stall_s: float,
+                 p_fail: float, retry: cost_model.RetryPolicy,
+                 links, v_bytes: float, cr_eff_all: np.ndarray,
+                 ks_all: np.ndarray, coeff_table: Optional[np.ndarray],
+                 fracs_all: np.ndarray, merge: AsyncMergeStep,
+                 train_update: Callable[[int, int, jax.Array], np.ndarray],
+                 on_flush: Callable, checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 0,
+                 extra_state: Optional[Callable[[], dict]] = None,
+                 load_extra: Optional[Callable[[dict], None]] = None):
+        if buffer_k > n_clients:
+            raise ValueError(f"async buffer K={buffer_k} exceeds the "
+                             f"client population {n_clients}")
+        self.n, self.n_params = n_clients, n_params
+        self.k, self.m_conc = buffer_k, concurrency
+        self.target = target_flushes
+        self.seed, self.alpha, self.stall_s = seed, alpha, stall_s
+        self.links, self.v_bytes = links, v_bytes
+        self.cr_eff_all = np.asarray(cr_eff_all, np.float64)
+        self.ks_all = np.asarray(ks_all, np.int32)
+        self.coeff_table = coeff_table
+        self.fracs_all = np.asarray(fracs_all, np.float64)
+        self.merge = merge
+        self.ef = merge.spec.needs_residuals
+        self.train_update, self.on_flush = train_update, on_flush
+        self.ckpt_dir, self.ckpt_every = checkpoint_dir, checkpoint_every
+        self.extra_state = extra_state or (lambda: {})
+        self.load_extra = load_extra or (lambda d: None)
+
+        self.proc = ArrivalProcess(seed=seed, p_fail=p_fail, retry=retry)
+        self.flat: Optional[jax.Array] = None
+        self.store = (np.zeros((n_clients + 1, n_params), np.float32)
+                      if self.ef else np.zeros((0,), np.float32))
+        self.buffer: List[dict] = []
+        self.inflight_updates: Dict[int, np.ndarray] = {}
+        self.busy = np.zeros(n_clients, bool)
+        self.version = 0
+        self.flushes = 0
+        self.now = 0.0
+        self.t_prev_flush = 0.0
+        self.stall_t = float("inf")
+
+    # ------------------------------------------------------------ dispatch
+    def _dispatch(self, client: int) -> None:
+        uid = self.proc.counter       # the uid dispatch() assigns next
+        update = self.train_update(client, uid, self.flat)
+        ev = self.proc.dispatch(client, self.version, self.now,
+                                self.links[client], self.v_bytes,
+                                float(self.cr_eff_all[client]))
+        self.inflight_updates[ev.uid] = np.asarray(update, np.float32)
+        self.busy[client] = True
+
+    def _top_up(self) -> None:
+        while len(self.proc) < self.m_conc:
+            free = np.flatnonzero(~self.busy)
+            if free.size == 0:
+                return
+            rng = np.random.default_rng(
+                (self.seed, SELECT_TAG, self.proc.counter))
+            self._dispatch(int(free[rng.integers(free.size)]))
+
+    # --------------------------------------------------------------- flush
+    def _flush(self, t_flush: float) -> None:
+        m = len(self.buffer)
+        ids = np.array([b["client"] for b in self.buffer], np.int64)
+        stal = self.version - np.array([b["version"] for b in self.buffer],
+                                       np.int64)
+        pend = self.proc.in_flight()[: self.k - m]
+        w = flush_weights(
+            ids, stal, [e.client for e in pend],
+            [self.version - e.version for e in pend],
+            buffer_k=self.k, alpha=self.alpha,
+            coeff_table=self.coeff_table, fracs_all=self.fracs_all)
+        updates = np.zeros((self.k, self.n_params), np.float32)
+        wpad = np.zeros((self.k,), np.float32)
+        kpad = np.ones((self.k,), np.int32)
+        act = np.zeros((self.k,), bool)
+        ids_pad = np.full((self.k,), self.n, np.int64)
+        for j, b in enumerate(self.buffer):
+            updates[j] = b["update"]
+        wpad[:m], kpad[:m], act[:m], ids_pad[:m] = w, self.ks_all[ids], \
+            True, ids
+        res_rows = (jnp.asarray(self.store[ids_pad]) if self.ef
+                    else jnp.zeros((0,), jnp.float32))
+        out = self.merge(self.flat, res_rows,
+                         {"updates": jnp.asarray(updates),
+                          "weights": jnp.asarray(wpad),
+                          "ks": jnp.asarray(kpad),
+                          "active": jnp.asarray(act)})
+        self.flat = out["flat"]
+        if self.ef:
+            self.store[ids] = np.asarray(out["residuals"])[:m]
+        dur = [b["t_arrive"] - b["t_dispatch"] for b in self.buffer]
+        rt = cost_model.RoundTime(actual=t_flush - self.t_prev_flush,
+                                  max=float(np.max(dur)),
+                                  min=float(np.min(dur)))
+        self.busy[ids] = False
+        self.buffer.clear()
+        self.t_prev_flush = t_flush
+        self.stall_t = float("inf")
+        self.on_flush(self.flushes, self.flat, rt)
+        self.version += 1
+        self.flushes += 1
+
+    # ------------------------------------------------------- checkpointing
+    # Large f32 tensors ride in the checkpoint TREE; every scalar /
+    # timestamp / counter rides in msgpack ``extra`` — msgpack floats are
+    # exact float64 round-trips, whereas restored tree leaves come back as
+    # jnp arrays (float64 would be squashed to f32 under the default x64
+    # setting, silently perturbing the replayed event timeline).
+    _EV_COLS = ("uid", "client", "version", "t_dispatch", "t_resolve",
+                "arrived", "attempts", "progress", "timed_out")
+
+    def _ckpt_like(self) -> dict:
+        return {
+            "flat": jnp.zeros((self.n_params,), jnp.float32),
+            "residuals": np.zeros_like(self.store),
+            "buf_updates": np.zeros((self.k, self.n_params), np.float32),
+            "if_updates": np.zeros((self.m_conc, self.n_params),
+                                   np.float32),
+        }
+
+    def _save(self) -> None:
+        from repro import checkpoint as ckpt_mod
+        tree = self._ckpt_like()
+        tree["flat"] = self.flat
+        tree["residuals"] = self.store
+        for j, b in enumerate(self.buffer):
+            tree["buf_updates"][j] = b["update"]
+        st = self.proc.state()
+        uids = [int(u) for u in st["uid"]]
+        for j, uid in enumerate(uids):
+            tree["if_updates"][j] = self.inflight_updates[uid]
+        extra = {
+            "counter": self.proc.counter, "version": self.version,
+            "flushes": self.flushes, "now": self.now,
+            "t_prev_flush": self.t_prev_flush,
+            "stall_t": None if np.isinf(self.stall_t) else self.stall_t,
+            "buffer": [[int(b["client"]), int(b["version"]), int(b["uid"]),
+                        float(b["t_arrive"]), float(b["t_dispatch"])]
+                       for b in self.buffer],
+            "inflight": {col: [c.item() for c in st[col]]
+                         for col in self._EV_COLS},
+        }
+        extra.update(self.extra_state())
+        ckpt_mod.save(self.ckpt_dir, self.flushes, tree, extra=extra)
+
+    def _restore(self) -> bool:
+        from repro import checkpoint as ckpt_mod
+        if not self.ckpt_dir or not ckpt_mod.list_steps(self.ckpt_dir):
+            return False
+        tree, _step, extra = ckpt_mod.restore_latest_valid(
+            self.ckpt_dir, self._ckpt_like())
+        self.flat = tree["flat"]
+        if self.ef:
+            # np.array (copy): asarray of a jnp leaf is a read-only view,
+            # and the store is scattered into on every flush
+            self.store = np.array(tree["residuals"], np.float32)
+        self.buffer = [
+            {"client": c, "version": v, "uid": u, "t_arrive": ta,
+             "t_dispatch": td, "update": np.asarray(tree["buf_updates"][j])}
+            for j, (c, v, u, ta, td) in enumerate(extra["buffer"])]
+        inflight = extra["inflight"]
+        dtypes = {"uid": np.int64, "client": np.int64, "version": np.int64,
+                  "t_dispatch": np.float64, "t_resolve": np.float64,
+                  "arrived": bool, "attempts": np.int64,
+                  "progress": np.float64, "timed_out": bool}
+        state = {col: np.asarray(inflight[col], dtypes[col])
+                 for col in self._EV_COLS}
+        state["counter"] = np.array([extra["counter"]], np.int64)
+        self.proc.load_state(state)
+        self.inflight_updates = {
+            int(uid): np.asarray(tree["if_updates"][j])
+            for j, uid in enumerate(inflight["uid"])}
+        self.version, self.flushes = extra["version"], extra["flushes"]
+        self.now = extra["now"]
+        self.t_prev_flush = extra["t_prev_flush"]
+        self.stall_t = (float("inf") if extra["stall_t"] is None
+                        else extra["stall_t"])
+        self.busy[:] = False
+        for b in self.buffer:
+            self.busy[b["client"]] = True
+        for ev in self.proc.in_flight():
+            self.busy[ev.client] = True
+        self.load_extra(extra)
+        return True
+
+    # ----------------------------------------------------------- main loop
+    def run(self, flat0, stop_after: Optional[int] = None) -> jax.Array:
+        """Drive the loop to ``target_flushes`` (or ``stop_after``, to
+        simulate a crash at a flush boundary). Resumes from the newest
+        intact checkpoint when one exists. Returns the final flat params."""
+        self.flat = flat0
+        self._restore()
+        # top-up is idempotent at full concurrency; after a restore it
+        # replays the dispatches the original run made right after the
+        # checkpointed flush (counter-keyed draws -> identical events)
+        self._top_up()
+        while self.flushes < self.target:
+            if stop_after is not None and self.flushes >= stop_after:
+                return self.flat
+            t_next = self.proc.peek_time()
+            if self.buffer and (t_next is None or self.stall_t < t_next):
+                # stall deadline passed (or nothing else can ever arrive):
+                # flush partially with renormalized coefficients
+                t = self.now if t_next is None and np.isinf(self.stall_t) \
+                    else self.stall_t
+                self.now = max(self.now, t)
+                self._flush(self.now)
+                self._after_flush()
+                self._top_up()
+                continue
+            if t_next is None:
+                break        # nothing in flight, nothing buffered
+            ev = self.proc.pop()
+            self.now = ev.t_resolve
+            if ev.arrived:
+                self.buffer.append({
+                    "client": ev.client, "version": ev.version,
+                    "uid": ev.uid, "t_arrive": ev.t_resolve,
+                    "t_dispatch": ev.t_dispatch,
+                    "update": self.inflight_updates.pop(ev.uid)})
+                if len(self.buffer) == 1:
+                    self.stall_t = self.now + self.stall_s
+                if len(self.buffer) >= self.k:
+                    self._flush(self.now)
+                    self._after_flush()
+            else:
+                # upload aborted (retries exhausted or deadline hit): the
+                # trained update is dropped; EF untouched (residuals only
+                # change on merge), so nothing is lost but the work
+                self.inflight_updates.pop(ev.uid)
+                self.busy[ev.client] = False
+            self._top_up()
+        return self.flat
+
+    def _after_flush(self) -> None:
+        if (self.ckpt_dir and self.ckpt_every
+                and self.flushes % self.ckpt_every == 0):
+            self._save()
+
+
+# ------------------------------------------------------ simulation driver
+def run_async_sim(sim, acfg, rng, clients, parts, fracs_all, links, server,
+                  steps_by_client, s_max, x_train, y_train, x_test, y_test,
+                  failure, straggler, checkpoint_dir: Optional[str] = None,
+                  checkpoint_every: int = 0,
+                  stop_after: Optional[int] = None):
+    """``run_fl(engine="async")`` body. Two modes:
+
+    * ``sim.async_sync_arrivals``: the parity anchor — replays the shared
+      host round plans (``_plan_rounds``, same rng stream as every sync
+      engine) through the async train + merge programs with zero staleness.
+      Reproduces the scan engine's trajectory (pop_scan's for EF
+      strategies, whose per-client residual convention this engine shares).
+    * general: the event-driven FedBuff loop with the fault-tolerant
+      arrival process; ``sim.rounds`` counts buffer flushes. ``failure`` /
+      ``straggler`` are subsumed by the arrival process here (slow links
+      arrive late, uploads fail/retry/abort per ``async_p_fail_upload``).
+    """
+    from repro.core import aggregation as agg_mod
+    from repro.fed import simulation as sim_mod
+
+    result = sim_mod.FLSimResult()
+    n, n_params, v_bytes = sim.n_clients, server.n_params, server.v_bytes
+    strat, ef, bs = acfg.strat, acfg.strat.needs_residuals, sim.batch_size
+    n_sel = sim_mod.cohort_slots(n, sim.participation)
+    x_all, y_all = jnp.asarray(x_train), jnp.asarray(y_train)
+    xt, yt = jnp.asarray(x_test), jnp.asarray(y_test)
+
+    def gather_batches(x):
+        idx = x["sample_idx"]
+        return {"x": x_all[idx], "y": y_all[idx]}
+
+    train = make_async_train_step(sim_mod.mlp_loss, server.params, lr=sim.lr,
+                                  make_batches=gather_batches,
+                                  strategy=acfg.strategy)
+    merge = make_async_merge_step(acfg, eta=server.eta)
+
+    if sim.async_sync_arrivals:
+        return _run_sync_parity(sim, acfg, rng, clients, parts, fracs_all,
+                                links, server, steps_by_client, s_max,
+                                failure, straggler, train, merge, xt, yt,
+                                result)
+
+    # -------------------------------------------------- general async mode
+    k_buf = sim.async_buffer_k or n_sel
+    m_conc = sim.async_concurrency or max(1, min(2 * k_buf, n - k_buf))
+    fracs_norm = np.asarray(fracs_all, np.float64)
+    fracs_norm = fracs_norm / fracs_norm.sum()
+    crs_all, coeffs_all, _info = agg_mod.round_schedule(
+        acfg, n, fracs_norm, links, v_bytes)
+    ks_all = agg_mod.ks_for_schedule(n_params, crs_all, acfg)
+    # dense wire formats return a scalar 1.0 — broadcast to per-client
+    cr_eff_all = np.broadcast_to(np.asarray(
+        strat.wire.cr_eff(np.asarray(crs_all, np.float64), n_params),
+        np.float64), (n,))
+    retry = cost_model.RetryPolicy(
+        max_attempts=sim.async_max_attempts, backoff_s=sim.async_backoff_s,
+        backoff_factor=sim.async_backoff_factor,
+        timeout_s=sim.async_upload_timeout_s)
+
+    def train_update(client: int, uid: int, flat) -> np.ndarray:
+        rng_b = np.random.default_rng((sim.seed, BATCH_TAG, uid))
+        steps = int(steps_by_client[client])
+        local = clients[client].fixed_batch_indices(bs, steps, rng_b)
+        idx = np.zeros((1, s_max, bs), np.int32)
+        idx[0, :steps] = parts[client][local].reshape(steps, bs)
+        smask = np.zeros((1, s_max), bool)
+        smask[0, :steps] = True
+        upd = train(flat, {"sample_idx": jnp.asarray(idx),
+                           "step_mask": jnp.asarray(smask)})
+        return np.asarray(upd[0])
+
+    def on_flush(flush_idx: int, flat, rt: cost_model.RoundTime) -> None:
+        server.times.add(rt)
+        result.executed_rounds.append(flush_idx)
+        if sim_mod._is_eval_round(sim, flush_idx):
+            acc = float(sim_mod.mlp_accuracy(server._unravel(flat), xt, yt))
+            result.accuracies.append((flush_idx, acc))
+
+    def extra_state() -> dict:
+        return {"accuracies": [[int(r), float(a)]
+                               for r, a in result.accuracies],
+                "executed_rounds": [int(r) for r in result.executed_rounds],
+                "times": [[float(t.actual), float(t.max), float(t.min)]
+                          for t in server.times.per_round]}
+
+    def load_extra(extra: dict) -> None:
+        result.accuracies = [(int(r), float(a))
+                             for r, a in extra["accuracies"]]
+        result.executed_rounds = list(extra["executed_rounds"])
+        for a, mx, mn in extra["times"]:
+            server.times.add(cost_model.RoundTime(a, mx, mn))
+
+    loop = BufferedAsyncLoop(
+        n_clients=n, n_params=n_params, buffer_k=k_buf, concurrency=m_conc,
+        target_flushes=sim.rounds, seed=sim.seed, alpha=sim.async_alpha,
+        stall_s=sim.async_stall_s, p_fail=sim.async_p_fail_upload,
+        retry=retry, links=links, v_bytes=v_bytes, cr_eff_all=cr_eff_all,
+        ks_all=ks_all,
+        coeff_table=(coeffs_all if strat.weighting == "bcrs" else None),
+        fracs_all=fracs_all, merge=merge, train_update=train_update,
+        on_flush=on_flush, checkpoint_dir=checkpoint_dir,
+        checkpoint_every=checkpoint_every, extra_state=extra_state,
+        load_extra=load_extra)
+    t0 = time.perf_counter()
+    flat = loop.run(server._flat, stop_after=stop_after)
+    wall = time.perf_counter() - t0
+
+    server._flat = flat
+    server.params = server._unravel(flat)
+    result.times = server.times
+    result.final_accuracy = (result.accuracies[-1][1]
+                             if result.accuracies else 0.0)
+    nf = max(len(result.executed_rounds), 1)
+    result.wall_per_round = [wall / nf] * len(result.executed_rounds)
+    if ef:
+        result.final_residuals = np.asarray(loop.store[:n])
+    result.async_loop = loop
+    return result
+
+
+def _run_sync_parity(sim, acfg, rng, clients, parts, fracs_all, links,
+                     server, steps_by_client, s_max, failure, straggler,
+                     train, merge, xt, yt, result):
+    """Degenerate-async parity mode: synchronous arrivals, buffer = cohort,
+    staleness 0 (discount is the exact identity at s=0 for any alpha)."""
+    from repro.fed import simulation as sim_mod
+    n, n_params, bs = sim.n_clients, server.n_params, sim.batch_size
+    n_sel = sim_mod.cohort_slots(n, sim.participation)
+    ef = acfg.strat.needs_residuals
+
+    plans = sim_mod._plan_rounds(sim, acfg, rng, clients, parts, fracs_all,
+                                 links, server, steps_by_client, s_max,
+                                 failure, straggler, False)
+    if not plans:
+        result.times = server.times
+        return result
+    store = (np.zeros((n + 1, n_params), np.float32) if ef
+             else np.zeros((0,), np.float32))
+    flat = server._flat
+    for rnd, selected, weights, ks, _ko, idx in plans:
+        t0 = time.perf_counter()
+        c_r = len(selected)
+        x = {"sample_idx": np.zeros((n_sel, s_max, bs), np.int32),
+             "step_mask": np.zeros((n_sel, s_max), bool)}
+        x["sample_idx"][:c_r] = idx.reshape(c_r, s_max, bs)
+        for j, c in enumerate(selected):
+            x["step_mask"][j, : int(steps_by_client[c])] = True
+        updates = train(flat, {k: jnp.asarray(v) for k, v in x.items()})
+        ids_pad = np.full((n_sel,), n, np.int64)
+        ids_pad[:c_r] = selected
+        wpad = np.zeros((n_sel,), np.float32)
+        wpad[:c_r] = weights
+        kpad = np.ones((n_sel,), np.int32)
+        kpad[:c_r] = ks
+        act = np.zeros((n_sel,), bool)
+        act[:c_r] = True
+        res_rows = (jnp.asarray(store[ids_pad]) if ef
+                    else jnp.zeros((0,), jnp.float32))
+        out = merge(flat, res_rows, {"updates": updates,
+                                     "weights": jnp.asarray(wpad),
+                                     "ks": jnp.asarray(kpad),
+                                     "active": jnp.asarray(act)})
+        flat = out["flat"]
+        if ef:
+            store[selected] = np.asarray(out["residuals"])[:c_r]
+        result.wall_per_round.append(time.perf_counter() - t0)
+        result.executed_rounds.append(rnd)
+        if sim_mod._is_eval_round(sim, rnd):
+            acc = float(sim_mod.mlp_accuracy(server._unravel(flat), xt, yt))
+            result.accuracies.append((rnd, acc))
+
+    server._flat = flat
+    server.params = server._unravel(flat)
+    result.times = server.times
+    result.final_accuracy = (result.accuracies[-1][1]
+                             if result.accuracies else 0.0)
+    if ef:
+        result.final_residuals = np.asarray(store[:n])
+    return result

@@ -114,6 +114,39 @@ class FLSimConfig:
     #: for a much tighter static shape. Approximation knob — changes the
     #: trajectory, so parity suites leave it at 1.0.
     step_cap_quantile: float = 1.0
+    # ------------------------- engine="async" (FedBuff buffered) knobs ----
+    #: merge buffer size K (0 -> the synchronous cohort size C·N). In async
+    #: mode ``rounds`` counts buffer FLUSHES, keeping trajectories and eval
+    #: cadence comparable with the synchronous engines round-for-round
+    async_buffer_k: int = 0
+    #: in-flight upload concurrency M (0 -> min(2K, N - K), the FedBuff
+    #: convention of over-provisioning dispatches vs the buffer)
+    async_concurrency: int = 0
+    #: staleness-discount exponent: w_i / (1 + s_i)^alpha (0 disables)
+    async_alpha: float = 0.5
+    #: partial-flush stall deadline (seconds of virtual time after the
+    #: FIRST arrival into an empty buffer; inf = only flush when full)
+    async_stall_s: float = float("inf")
+    #: degenerate parity mode: replay the synchronous host round plans
+    #: through the async train/merge programs (zero staleness by
+    #: construction) — reproduces the scan engines' trajectories
+    async_sync_arrivals: bool = False
+    #: per-attempt mid-transfer upload failure probability; failed attempts
+    #: resume from their byte offset after exponential backoff
+    async_p_fail_upload: float = 0.0
+    async_max_attempts: int = 3
+    async_backoff_s: float = 0.5
+    async_backoff_factor: float = 2.0
+    #: hard wall-clock deadline per upload (seconds since dispatch)
+    async_upload_timeout_s: float = float("inf")
+    # ------------------------------------------- link population shape ----
+    #: client uplink bandwidth distribution (normal, floored at 0.05 Mbps —
+    #: ``cost_model.sample_link_arrays``). Defaults match the historical
+    #: hard-coded draw, so seeded trajectories are unchanged; raising the sd
+    #: produces the long-tailed heterogeneous-bandwidth mixes the async
+    #: bench sweeps (benchmarks/bench_round.py --async)
+    link_bw_mean_mbps: float = 1.0
+    link_bw_sd_mbps: float = 0.2
 
 
 @dataclass
@@ -127,6 +160,10 @@ class FLSimResult:
     #: final EF residuals [C, n] (eftopk only) — exposed so the scan engine's
     #: bit-parity with the fused engine is directly assertable
     final_residuals: Optional[np.ndarray] = None
+    #: engine="async" only: the finished ``BufferedAsyncLoop`` (buffer /
+    #: in-flight / counter state) — what the crash-restart bit-exactness
+    #: tests compare against an uninterrupted run
+    async_loop: Optional[object] = None
 
     def time_to_accuracy(self, target: float) -> Optional[float]:
         """Accumulated actual comm time up to AND INCLUDING the round whose
@@ -169,7 +206,9 @@ def _setup_sim(sim: FLSimConfig, acfg: agg_mod.AggregationConfig):
     clients = build_client_datasets(x_train, y_train, parts)
     fracs_all = data_fractions(parts)
     params = mlp_init(key, sim.dim, sim.n_classes, hidden=sim.hidden)
-    links = cost_model.sample_links(sim.n_clients, rng)
+    links = cost_model.sample_links(sim.n_clients, rng,
+                                    bw_mean_mbps=sim.link_bw_mean_mbps,
+                                    bw_sd_mbps=sim.link_bw_sd_mbps)
     server = FLServer(params=params, acfg=acfg, eta=1.0, links=links)
     return (rng, clients, parts, fracs_all,
             (x_train, y_train, x_test, y_test), server)
@@ -336,10 +375,21 @@ def run_fl(sim: FLSimConfig, acfg: agg_mod.AggregationConfig,
            failure: Optional[FailureInjector] = None,
            collect_overlap: bool = False, fused: bool = True,
            engine: Optional[str] = None,
-           straggler: Optional[StragglerPolicy] = None) -> FLSimResult:
+           straggler: Optional[StragglerPolicy] = None,
+           checkpoint_dir: Optional[str] = None, checkpoint_every: int = 0,
+           stop_after: Optional[int] = None) -> FLSimResult:
     """Run the simulation. ``engine`` selects the round engine
-    ("legacy" | "fused" | "scan" | "pop_scan" | "population"); when None it
-    falls back to the legacy ``fused`` bool ("fused" / "legacy").
+    ("legacy" | "fused" | "scan" | "pop_scan" | "population" | "async");
+    when None it falls back to the legacy ``fused`` bool
+    ("fused" / "legacy").
+
+    ``engine="async"`` is the FedBuff-style buffered engine
+    (``fed.async_engine``): ``sim.rounds`` counts buffer flushes, the
+    ``sim.async_*`` knobs shape the buffer/arrival process, and
+    ``checkpoint_dir`` / ``checkpoint_every`` (flushes) enable crash-safe
+    state persistence — a rerun with the same config resumes bit-exactly
+    from the newest intact checkpoint. ``stop_after`` aborts after that
+    many flushes (test hook simulating a crash at a flush boundary).
 
     The two population engines treat ``sim.n_clients`` as the registered
     population P and carry EF residuals PER CLIENT (state survives cohort
@@ -350,8 +400,14 @@ def run_fl(sim: FLSimConfig, acfg: agg_mod.AggregationConfig,
     bit-exact with pop_scan)."""
     if engine is None:
         engine = "fused" if fused else "legacy"
-    if engine not in ("legacy", "fused", "scan", "pop_scan", "population"):
+    if engine not in ("legacy", "fused", "scan", "pop_scan", "population",
+                      "async"):
         raise ValueError(f"unknown engine {engine!r}")
+    if engine != "async" and (checkpoint_dir is not None
+                              or stop_after is not None):
+        raise ValueError("checkpoint_dir / stop_after are engine='async' "
+                         "features (the sync checkpointing entry point is "
+                         "launch.fl_train)")
     (rng, clients, parts, fracs_all,
      (x_train, y_train, x_test, y_test), server) = _setup_sim(sim, acfg)
     links = server.links
@@ -363,6 +419,17 @@ def run_fl(sim: FLSimConfig, acfg: agg_mod.AggregationConfig,
                          server, steps_by_client, s_max, x_train, y_train,
                          x_test, y_test, failure, straggler, collect_overlap,
                          per_client_ef=(engine == "pop_scan"))
+    if engine == "async":
+        if collect_overlap:
+            raise ValueError("the async engine does not carry the Fig. 4 "
+                             "overlap instrumentation — use engine='scan'")
+        from repro.fed.async_engine import run_async_sim
+        return run_async_sim(sim, acfg, rng, clients, parts, fracs_all,
+                             links, server, steps_by_client, s_max, x_train,
+                             y_train, x_test, y_test, failure, straggler,
+                             checkpoint_dir=checkpoint_dir,
+                             checkpoint_every=checkpoint_every,
+                             stop_after=stop_after)
     if engine == "population":
         if collect_overlap:
             raise ValueError("the population engine does not carry the "
@@ -801,7 +868,7 @@ def run_fl_traced(sim: FLSimConfig, acfg: agg_mod.AggregationConfig,
         active = survivors_traced(k_fail, n, p_fail)[cohort]
         if straggler is not None:
             t = jnp.where(active, dev["times"][cohort], jnp.inf)
-            active = arrival_mask_traced(t, n_sel)
+            active = arrival_mask_traced(t, n_sel, straggler)
         coeffs = dev["coeffs"][cohort]
         if weighted_by_coeffs:
             w = renormalize_coefficients_traced(coeffs, active)

@@ -1,6 +1,8 @@
+from repro.ft.arrivals import ArrivalProcess, UploadEvent, failure_fracs
 from repro.ft.failures import ElasticPool, FailureInjector
 from repro.ft.straggler import (StragglerPolicy, arrivals, over_select,
                                 renormalize_coefficients)
 
 __all__ = ["FailureInjector", "ElasticPool", "StragglerPolicy", "arrivals",
-           "over_select", "renormalize_coefficients"]
+           "over_select", "renormalize_coefficients", "ArrivalProcess",
+           "UploadEvent", "failure_fracs"]

@@ -29,6 +29,33 @@ def survivors_traced(key, n_clients: int, p_fail: float):
     return alive | (~alive.any() & revived)
 
 
+_U64 = (1 << 64) - 1
+
+
+def counter_uniform(seed: int, round_idx: int, ids: np.ndarray) -> np.ndarray:
+    """Vectorized counter-based uniform draw on [0, 1) keyed on
+    ``(seed, round, id)`` — the population-scale survivor stream.
+
+    PINNED CONVENTION (v1 — changing any constant below changes every
+    sparse-failure trajectory): the key is
+    ``id * PHI ^ rot(round * M1) ^ rot(seed * M2)`` in u64, run through the
+    splitmix64 finalizer, top 53 bits scaled by 2^-53. Pure u64 numpy
+    arithmetic — O(C) with no per-client Python, unlike one
+    ``np.random.default_rng((seed, round, id))`` per id."""
+    phi = np.uint64(0x9E3779B97F4A7C15)
+    m1, m2 = np.uint64(0xBF58476D1CE4E5B9), np.uint64(0x94D049BB133111EB)
+    x = np.asarray(ids, dtype=np.uint64) * phi
+    x ^= np.uint64((round_idx * 0xBF58476D1CE4E5B9) & _U64)
+    x ^= np.uint64((seed * 0x94D049BB133111EB) & _U64)
+    # splitmix64 finalizer (Steele et al.) — full-avalanche mix
+    x ^= x >> np.uint64(30)
+    x *= m1
+    x ^= x >> np.uint64(27)
+    x *= m2
+    x ^= x >> np.uint64(31)
+    return (x >> np.uint64(11)).astype(np.float64) * (2.0 ** -53)
+
+
 @dataclass
 class FailureInjector:
     """Deterministic failure schedule for tests/sims: client i fails in round
@@ -56,13 +83,13 @@ class FailureInjector:
         streaming cohorts at P = 10^6). Its OWN deterministic stream, not
         bit-parity with ``survivors`` — drivers pick one convention and
         keep it (the simulation engines keep the dense draw so their seeded
-        trajectories stay comparable). The never-lose-everyone revive is
-        applied over the cohort: if every sampled client dies, the first
-        one is revived."""
+        trajectories stay comparable). The stream is the pinned
+        counter-based hash (:func:`counter_uniform`, splitmix64 v1) —
+        vectorized u64 numpy, no per-client ``default_rng`` construction.
+        The never-lose-everyone revive is applied over the cohort: if every
+        sampled client dies, the first one is revived."""
         ids = np.asarray(ids)
-        u = np.array([np.random.default_rng(
-            (self.seed, round_idx, int(c))).random() for c in ids])
-        alive = u >= self.p_fail
+        alive = counter_uniform(self.seed, round_idx, ids) >= self.p_fail
         if self.scheduled:
             for r, c in self.scheduled:
                 if r == round_idx:

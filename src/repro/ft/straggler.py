@@ -26,34 +26,47 @@ def over_select(n_target: int, policy: StragglerPolicy) -> int:
 def arrivals(times: Sequence[float], n_target: int,
              policy: StragglerPolicy) -> Tuple[np.ndarray, float]:
     """Given per-client round completion times, pick the aggregation set:
-    first ``n_target`` arrivals, capped by the deadline. Returns
-    (bool mask over clients, effective round duration)."""
+    first ``n_target`` arrivals, capped by the deadline
+    (``deadline_factor`` x the median completion time). A client past the
+    deadline is excluded even when fewer than ``n_target`` have arrived —
+    except the very fastest one, which is always taken so the round can
+    never go empty. Returns (bool mask over clients, effective round
+    duration)."""
     t = np.asarray(times)
-    order = np.argsort(t)
+    order = np.argsort(t, kind="stable")
     deadline = policy.deadline_factor * float(np.median(t))
     chosen = np.zeros(len(t), bool)
     took = 0
     for i in order:
-        if took >= n_target and t[i] > deadline:
-            break
-        chosen[i] = True
-        took += 1
         if took >= n_target:
             break
+        if took > 0 and t[i] > deadline:
+            break          # deadline cut; the took>0 guard keeps >= 1 client
+        chosen[i] = True
+        took += 1
     dur = float(t[chosen].max()) if chosen.any() else 0.0
     return chosen, dur
 
 
-def arrival_mask_traced(times, n_target: int):
+def arrival_mask_traced(times, n_target: int,
+                        policy: StragglerPolicy | None = None):
     """Traced twin of ``arrivals`` (in-jit straggler deadline for the
-    scanned simulation): pick the ``n_target`` fastest finishers. Clients
-    whose completion time is +inf (already failed) never arrive. Returns a
-    bool mask over the cohort axis."""
+    scanned simulation): pick the ``n_target`` fastest finishers, capped —
+    when a ``policy`` is given — by the same deadline as the host path
+    (``deadline_factor`` x median over the *finite* completion times, with
+    the same never-empty guard on the fastest finisher). Clients whose
+    completion time is +inf (already failed) never arrive. Returns a bool
+    mask over the cohort axis."""
     import jax.numpy as jnp
     t = jnp.asarray(times, jnp.float32)
-    order = jnp.argsort(t)
+    order = jnp.argsort(t, stable=True)
     rank = jnp.zeros_like(order).at[order].set(jnp.arange(t.shape[0]))
-    return (rank < n_target) & jnp.isfinite(t)
+    mask = (rank < n_target) & jnp.isfinite(t)
+    if policy is not None:
+        deadline = policy.deadline_factor * jnp.nanmedian(
+            jnp.where(jnp.isfinite(t), t, jnp.nan))
+        mask &= (t <= deadline) | (rank == 0)
+    return mask
 
 
 def renormalize_coefficients_traced(coeffs, arrived):

@@ -82,7 +82,14 @@ class FLTrainConfig:
     over_selection: float = 0.0  # rho > 0 enables straggler over-selection
     checkpoint_dir: str = ""
     checkpoint_every: int = 0    # rounds per scan chunk; 0 = auto-capped
-    engine: str = "scan"         # "scan" | "round"
+    engine: str = "scan"         # "scan" | "round" | "async"
+    # ----------------- engine="async" (FedBuff buffered) knobs -----------
+    async_buffer_k: int = 0      # 0 -> the cohort slot count
+    async_concurrency: int = 0   # 0 -> min(2K, clients - K)
+    async_alpha: float = 0.5     # staleness-discount exponent
+    async_stall_s: float = float("inf")   # partial-flush deadline
+    async_p_fail: float = 0.0    # per-attempt mid-transfer failure prob
+    async_timeout_s: float = float("inf")
     population: int = 0          # > 0: streaming-cohort mode over P clients
     cohort: int = 0              # cohort slots C (population mode; 0 ->
                                  # --clients is reused as the cohort size)
@@ -243,6 +250,12 @@ def run(cfg: FLTrainConfig) -> dict:
                if cfg.fail_prob > 0 else None)
     straggler = (StragglerPolicy(over_selection=cfg.over_selection)
                  if cfg.over_selection > 0 else None)
+    if cfg.engine == "async":
+        if cfg.population > 0:
+            raise ValueError("engine='async' runs in dense-state mode only "
+                             "(streaming-population async is future work)")
+        return _run_async(cfg, model, model_cfg, params, links, strat,
+                          acfg, fracs_all, n_flat, v_bytes)
     plan = _build_plan(cfg, rng, fracs_all, links, v_bytes, acfg,
                        failure, straggler)
     times = cost_model.TimeAccumulator()
@@ -370,6 +383,90 @@ def run(cfg: FLTrainConfig) -> dict:
             "executed_rounds": [plan.rounds[i] for i in todo],
             "wall_per_round": wall_per_round, "chunk_rounds": chunk_rounds,
             "times": times, "resumed_from": resumed_from}
+
+
+def _run_async(cfg: FLTrainConfig, model, model_cfg, params, links, strat,
+               acfg: AggregationConfig, fracs_all, n_flat: int,
+               v_bytes: float) -> dict:
+    """FedBuff-style async buffered training on the real model: the
+    simulation's ``fed.async_engine`` loop, in flat parameter space, with
+    counter-keyed synthetic LM batches per dispatch (restart-invariant, like
+    the sync driver's round-indexed streams). ``cfg.rounds`` counts buffer
+    flushes; crash-safe state (params, per-client EF store, buffer,
+    in-flight uploads) persists through ``cfg.checkpoint_dir`` and a rerun
+    resumes bit-exactly. Sharded (TP/FSDP) async is future work — this path
+    trains single-device like the simulation engines."""
+    from repro.core import aggregation as agg_mod
+    from repro.core.compression import flatten_tree
+    from repro.fed import async_engine as async_mod
+
+    flat0, unravel = flatten_tree(params)
+    times = cost_model.TimeAccumulator()
+    c_slots = cfg.c_slots
+    k_buf = cfg.async_buffer_k or c_slots
+    m_conc = cfg.async_concurrency or max(1, min(2 * k_buf,
+                                                 cfg.clients - k_buf))
+    fracs_norm = np.asarray(fracs_all, np.float64)
+    fracs_norm = fracs_norm / fracs_norm.sum()
+    crs_all, coeffs_all, _info = agg_mod.round_schedule(
+        acfg, cfg.clients, fracs_norm, links, v_bytes)
+    ks_all = agg_mod.ks_for_schedule(n_flat, crs_all, acfg)
+    cr_eff_all = np.broadcast_to(np.asarray(
+        strat.wire.cr_eff(np.asarray(crs_all, np.float64), n_flat),
+        np.float64), (cfg.clients,))
+
+    train = async_mod.make_async_train_step(
+        model.loss_fn, params, lr=cfg.lr,
+        make_batches=lambda x: x["batches"], strategy=cfg.strategy)
+    merge = async_mod.make_async_merge_step(acfg, eta=cfg.eta)
+    smask = jnp.ones((1, cfg.local_steps), bool)
+
+    def train_update(client: int, uid: int, flat) -> np.ndarray:
+        r = np.random.default_rng((cfg.seed, async_mod.BATCH_TAG, uid))
+        toks = synthetic_lm_tokens(
+            cfg.local_steps * cfg.batch, cfg.seq + 1, model_cfg.vocab_size,
+            r).reshape(1, cfg.local_steps, cfg.batch, cfg.seq + 1)
+        upd = train(flat, {"batches": {"tokens": jnp.asarray(toks[..., :-1]),
+                                       "labels": jnp.asarray(toks[..., 1:])},
+                           "step_mask": smask})
+        return np.asarray(upd[0])
+
+    def on_flush(flush_idx: int, flat, rt: cost_model.RoundTime) -> None:
+        times.add(rt)
+        if cfg.verbose:
+            print(f"[fl] flush {flush_idx} buffer {k_buf} "
+                  f"interval {rt.actual:.2f}s slowest_upload {rt.max:.2f}s")
+
+    def extra_state() -> dict:
+        return {"times": [[float(t.actual), float(t.max), float(t.min)]
+                          for t in times.per_round]}
+
+    def load_extra(extra: dict) -> None:
+        for a, mx, mn in extra.get("times", []):
+            times.add(cost_model.RoundTime(a, mx, mn))
+
+    ckpt_every = (cfg.checkpoint_every
+                  or (DEFAULT_CHECKPOINT_EVERY if cfg.checkpoint_dir else 0))
+    loop = async_mod.BufferedAsyncLoop(
+        n_clients=cfg.clients, n_params=n_flat, buffer_k=k_buf,
+        concurrency=m_conc, target_flushes=cfg.rounds, seed=cfg.seed,
+        alpha=cfg.async_alpha, stall_s=cfg.async_stall_s,
+        p_fail=cfg.async_p_fail,
+        retry=cost_model.RetryPolicy(timeout_s=cfg.async_timeout_s),
+        links=links, v_bytes=v_bytes, cr_eff_all=cr_eff_all, ks_all=ks_all,
+        coeff_table=(coeffs_all if strat.weighting == "bcrs" else None),
+        fracs_all=fracs_all, merge=merge, train_update=train_update,
+        on_flush=on_flush, checkpoint_dir=cfg.checkpoint_dir or None,
+        checkpoint_every=ckpt_every, extra_state=extra_state,
+        load_extra=load_extra)
+    flat = loop.run(jnp.asarray(flat0))
+    if cfg.verbose:
+        print(f"[fl] done; accumulated virtual wall {times.actual:.1f}s "
+              f"over {loop.flushes} flushes")
+    return {"params": unravel(flat), "residuals": loop.store, "losses": [],
+            "executed_rounds": list(range(loop.flushes)),
+            "wall_per_round": [], "chunk_rounds": [], "times": times,
+            "resumed_from": None, "async_loop": loop}
 
 
 def _run_population(cfg: FLTrainConfig, model, model_cfg, params, plan,
@@ -531,7 +628,20 @@ def main():
     ap.add_argument("--checkpoint-every", type=int, default=0,
                     help="rounds per scan chunk / checkpoint cadence "
                          "(0 = auto chunking, checkpoint at chunk ends)")
-    ap.add_argument("--engine", choices=("scan", "round"), default="scan")
+    ap.add_argument("--engine", choices=("scan", "round", "async"),
+                    default="scan")
+    ap.add_argument("--async-buffer-k", type=int, default=0,
+                    help="async merge buffer size K (0 = cohort slots)")
+    ap.add_argument("--async-concurrency", type=int, default=0,
+                    help="async in-flight dispatches M (0 = min(2K, N-K))")
+    ap.add_argument("--async-alpha", type=float, default=0.5,
+                    help="staleness-discount exponent")
+    ap.add_argument("--async-stall", type=float, default=float("inf"),
+                    help="partial-flush stall deadline in seconds")
+    ap.add_argument("--async-p-fail", type=float, default=0.0,
+                    help="per-attempt mid-transfer upload failure prob")
+    ap.add_argument("--async-timeout", type=float, default=float("inf"),
+                    help="per-upload hard deadline in seconds")
     ap.add_argument("--population", type=int, default=0,
                     help="registered client count P for streaming-cohort "
                          "mode (0 = dense-state mode over --clients)")
@@ -550,6 +660,10 @@ def main():
         checkpoint_dir=args.checkpoint_dir,
         checkpoint_every=args.checkpoint_every, engine=args.engine,
         population=args.population, cohort=args.cohort,
+        async_buffer_k=args.async_buffer_k,
+        async_concurrency=args.async_concurrency,
+        async_alpha=args.async_alpha, async_stall_s=args.async_stall,
+        async_p_fail=args.async_p_fail, async_timeout_s=args.async_timeout,
         seed=args.seed))
 
 

@@ -1,0 +1,283 @@
+"""The async buffered-aggregation engine (``engine="async"``), asserted:
+
+  * staleness discount is the identity at s=0 and non-increasing in s;
+  * partial-flush coefficients preserve the planned full-buffer step
+    magnitude (renormalization folds the missing slots' mass onto the
+    arrived ones);
+  * the retry-aware arrival process is a pure function of (seed, dispatch
+    order) and round-trips through its checkpoint state;
+  * the degenerate sync-arrivals configuration reproduces the scan
+    engine's trajectory exactly (pop_scan's for per-client-EF strategies,
+    residual matrix included);
+  * the buffer merge compiles exactly ONCE per run;
+  * every carry="ef" strategy survives p_fail > 0 end to end;
+  * a crash-restarted run (checkpoint -> stop -> resume) is bit-identical
+    to an uninterrupted one: params, residuals, times, accuracies.
+"""
+import numpy as np
+import pytest
+
+from repro.core import cost_model
+from repro.core.aggregation import AggregationConfig
+from repro.core.bcrs import ClientLink, comm_time, staleness_discount
+from repro.fed import async_engine
+from repro.fed.async_engine import flush_weights
+from repro.fed.simulation import FLSimConfig, run_fl
+from repro.ft.arrivals import ArrivalProcess, failure_fracs
+
+FAST = dict(rounds=6, n_train=1600, n_test=500, eval_every=2, seed=3)
+ASYNC = dict(async_buffer_k=4, async_p_fail_upload=0.3,
+             async_upload_timeout_s=60.0)
+
+
+def _accs(res):
+    return np.array([a for _, a in res.accuracies])
+
+
+def _times(res):
+    return np.array([[t.actual, t.max, t.min] for t in res.times.per_round])
+
+
+# ------------------------------------------------------ staleness weighting
+class TestStalenessDiscount:
+    def test_identity_at_zero_staleness(self):
+        w = np.array([0.4, 0.3, 0.2, 0.1])
+        np.testing.assert_array_equal(
+            staleness_discount(w, np.zeros(4), alpha=0.7), w)
+
+    def test_alpha_zero_disables(self):
+        w = np.array([0.5, 0.5])
+        np.testing.assert_array_equal(
+            staleness_discount(w, np.array([3.0, 9.0]), alpha=0.0), w)
+
+    def test_monotone_nonincreasing_in_staleness(self):
+        w = np.ones(6)
+        for alpha in (0.25, 0.5, 1.0, 2.0):
+            d = staleness_discount(w, np.arange(6, dtype=float), alpha)
+            assert (np.diff(d) < 0).all()
+            assert (d > 0).all() and (d <= 1.0).all()
+
+
+class TestFlushWeights:
+    COEFFS = np.array([0.05, 0.10, 0.15, 0.20, 0.25, 0.25])
+
+    def test_full_flush_is_discounted_passthrough(self):
+        ids, stal = [2, 0, 5], [0.0, 1.0, 2.0]
+        w = flush_weights(ids, stal, [], [], buffer_k=3, alpha=0.5,
+                          coeff_table=self.COEFFS)
+        expect = staleness_discount(self.COEFFS[ids], stal, 0.5)
+        np.testing.assert_allclose(w, expect, rtol=1e-12)
+
+    def test_partial_flush_preserves_planned_magnitude(self):
+        """A stall flush with m < K arrived takes the same total step the
+        full buffer would have: the pending uploads' discounted mass is
+        folded onto the arrived slots."""
+        ids, stal = [1, 4], [0.0, 1.0]
+        pend_ids, pend_stal = [3, 0], [2.0, 0.0]
+        w = flush_weights(ids, stal, pend_ids, pend_stal, buffer_k=4,
+                          alpha=0.5, coeff_table=self.COEFFS)
+        assert w.shape == (2,)
+        planned = staleness_discount(
+            self.COEFFS[ids + pend_ids],
+            np.array(stal + pend_stal), 0.5).sum()
+        assert w.sum() == pytest.approx(planned, rel=1e-12)
+        # arrived slots keep their relative discounted proportions
+        d = staleness_discount(self.COEFFS[ids], np.array(stal), 0.5)
+        np.testing.assert_allclose(w / w.sum(), d / d.sum(), rtol=1e-12)
+
+    def test_data_weighting_normalizes_over_occupants(self):
+        fracs = np.array([0.1, 0.2, 0.3, 0.4])
+        w = flush_weights([0, 3], [0.0, 0.0], [], [], buffer_k=2,
+                          alpha=0.5, fracs_all=fracs)
+        np.testing.assert_allclose(w, [0.2, 0.8], rtol=1e-12)
+
+
+# ------------------------------------------------------- arrival process
+def _link(rng):
+    return ClientLink(bandwidth_bps=float(rng.uniform(2e6, 3e7)),
+                      latency_s=float(rng.uniform(0.001, 0.04)))
+
+
+class TestRetries:
+    LINK = ClientLink(bandwidth_bps=1e7, latency_s=0.01)
+
+    def test_clean_upload_matches_comm_time(self):
+        out = cost_model.upload_time_with_retries(
+            self.LINK, 1e6, 0.1, [], cost_model.RetryPolicy())
+        assert out.arrived and out.attempts == 1 and not out.timed_out
+        assert out.t_resolve == pytest.approx(
+            comm_time(1e6, self.LINK, 0.1))
+
+    def test_resume_from_offset_crosses_wire_once(self):
+        """Payload bytes cross the wire exactly once across retries: the
+        retried run costs only extra latency + backoff over the clean one,
+        never a re-send of delivered bytes."""
+        pol = cost_model.RetryPolicy(backoff_s=0.5, backoff_factor=2.0)
+        clean = cost_model.upload_time_with_retries(
+            self.LINK, 1e6, 0.1, [], pol)
+        two_cuts = cost_model.upload_time_with_retries(
+            self.LINK, 1e6, 0.1, [0.5, 0.5], pol)
+        assert two_cuts.arrived and two_cuts.attempts == 3
+        assert two_cuts.t_resolve == pytest.approx(
+            clean.t_resolve + 2 * self.LINK.latency_s + 0.5 + 1.0)
+
+    def test_retries_exhausted_reports_progress(self):
+        out = cost_model.upload_time_with_retries(
+            self.LINK, 1e6, 0.1, [0.5, 0.75],
+            cost_model.RetryPolicy(max_attempts=2))
+        assert not out.arrived and not out.timed_out
+        assert out.progress == pytest.approx(0.875)
+
+    def test_timeout_clips(self):
+        out = cost_model.upload_time_with_retries(
+            self.LINK, 1e8, 1.0, [], cost_model.RetryPolicy(timeout_s=0.3))
+        assert not out.arrived and out.timed_out
+        assert out.t_resolve == pytest.approx(0.3)
+
+
+class TestArrivalProcess:
+    def _run_stream(self, proc, rng, n=12):
+        evs = []
+        for i in range(n):
+            proc.dispatch(int(rng.integers(8)), i, float(i) * 0.1,
+                          _link(rng), 4e5, 0.05)
+        while len(proc):
+            evs.append(proc.pop())
+        return evs
+
+    def test_deterministic_in_seed(self):
+        a = self._run_stream(ArrivalProcess(seed=5, p_fail=0.4),
+                             np.random.default_rng(0))
+        b = self._run_stream(ArrivalProcess(seed=5, p_fail=0.4),
+                             np.random.default_rng(0))
+        assert a == b
+        c = self._run_stream(ArrivalProcess(seed=6, p_fail=0.4),
+                             np.random.default_rng(0))
+        assert [e.t_resolve for e in a] != [e.t_resolve for e in c]
+
+    def test_failure_fracs_counter_based(self):
+        for uid in range(40):
+            f1 = failure_fracs(9, uid, 0.6, 4)
+            f2 = failure_fracs(9, uid, 0.6, 4)
+            assert f1 == f2 and len(f1) <= 4
+        # some dispatch must actually draw a failure at p_fail=0.6
+        assert any(failure_fracs(9, u, 0.6, 4) for u in range(40))
+
+    def test_state_roundtrip_reproduces_future(self):
+        rng = np.random.default_rng(2)
+        proc = ArrivalProcess(seed=7, p_fail=0.5)
+        for i in range(6):
+            proc.dispatch(i, 0, 0.0, _link(rng), 4e5, 0.05)
+        proc.pop(), proc.pop()
+        clone = ArrivalProcess(seed=7, p_fail=0.5)
+        clone.load_state(proc.state())
+        assert clone.counter == proc.counter
+        # identical remaining events AND identical post-restore dispatches
+        rng2 = np.random.default_rng(3)
+        link = _link(rng2)
+        proc.dispatch(7, 1, 1.0, link, 4e5, 0.05)
+        clone.dispatch(7, 1, 1.0, link, 4e5, 0.05)
+        while len(proc):
+            assert proc.pop() == clone.pop()
+        assert not len(clone)
+
+
+# ----------------------------------------------------- sync parity anchor
+class TestSyncParityAnchor:
+    def test_matches_scan_bcrs_opwa(self):
+        sim = FLSimConfig(**FAST, async_sync_arrivals=True)
+        acfg = AggregationConfig(strategy="bcrs_opwa", cr=0.05)
+        ref = run_fl(FLSimConfig(**FAST), acfg, engine="scan")
+        res = run_fl(sim, acfg, engine="async")
+        np.testing.assert_array_equal(_accs(res), _accs(ref))
+
+    def test_matches_pop_scan_eftopk_residuals_exact(self):
+        sim = FLSimConfig(**FAST, async_sync_arrivals=True)
+        acfg = AggregationConfig(strategy="eftopk", cr=0.05)
+        ref = run_fl(FLSimConfig(**FAST), acfg, engine="pop_scan")
+        res = run_fl(sim, acfg, engine="async")
+        np.testing.assert_array_equal(_accs(res), _accs(ref))
+        np.testing.assert_array_equal(res.final_residuals,
+                                      ref.final_residuals)
+
+
+# ------------------------------------------------------ general async mode
+class TestAsyncEngine:
+    @pytest.mark.parametrize("strategy", ["eftopk", "qtopk"])
+    def test_ef_strategies_survive_failures(self, strategy):
+        """carry="ef" strategies run end to end with mid-transfer upload
+        failures, and the buffer merge compiles exactly once per run."""
+        sim = FLSimConfig(**FAST, **ASYNC)
+        before = dict(async_engine.TRACE_COUNTS)
+        res = run_fl(sim, AggregationConfig(strategy=strategy, cr=0.05),
+                     engine="async")
+        delta = {k: v - before.get(k, 0)
+                 for k, v in async_engine.TRACE_COUNTS.items()
+                 if v != before.get(k, 0)}
+        assert delta.get(("async_merge", strategy)) == 1
+        assert delta.get(("async_train", strategy)) == 1
+        assert len(res.executed_rounds) == sim.rounds
+        assert res.final_accuracy > 0.2
+        assert res.final_residuals is not None
+        assert np.abs(res.final_residuals).sum() > 0
+
+    def test_deterministic(self):
+        sim = FLSimConfig(**FAST, **ASYNC)
+        acfg = AggregationConfig(strategy="bcrs_opwa", cr=0.05)
+        a, b = (run_fl(sim, acfg, engine="async") for _ in range(2))
+        np.testing.assert_array_equal(_accs(a), _accs(b))
+        np.testing.assert_array_equal(_times(a), _times(b))
+
+    def test_staleness_and_partial_flush(self):
+        """A tight stall deadline under heavy failures forces partial
+        flushes; the run still completes every flush, and virtual time
+        advances monotonically."""
+        sim = FLSimConfig(**{**FAST, **ASYNC, "async_stall_s": 0.05,
+                             "async_p_fail_upload": 0.5})
+        res = run_fl(sim, AggregationConfig(strategy="eftopk", cr=0.05),
+                     engine="async")
+        assert len(res.executed_rounds) == sim.rounds
+        assert (_times(res)[:, 0] >= 0).all()
+
+    def test_buffer_larger_than_population_rejected(self):
+        sim = FLSimConfig(**FAST, async_buffer_k=11)
+        with pytest.raises(ValueError, match="exceeds"):
+            run_fl(sim, AggregationConfig(strategy="fedavg"),
+                   engine="async")
+
+    def test_overlap_collection_rejected(self):
+        with pytest.raises(ValueError):
+            run_fl(FLSimConfig(**FAST), AggregationConfig(strategy="fedavg"),
+                   engine="async", collect_overlap=True)
+
+    def test_checkpoint_knobs_require_async(self):
+        with pytest.raises(ValueError):
+            run_fl(FLSimConfig(**FAST), AggregationConfig(strategy="fedavg"),
+                   engine="scan", checkpoint_dir="/tmp/x")
+
+
+# --------------------------------------------------------- crash restart
+class TestCrashRestart:
+    @pytest.mark.parametrize("strategy", ["bcrs_opwa", "eftopk"])
+    def test_restart_is_bit_exact(self, strategy, tmp_path):
+        """Checkpoint at flush 2, crash at flush 3, resume: the restarted
+        run's params, residuals, times, accuracies, buffer occupancy and
+        dispatch counter all match the uninterrupted run exactly."""
+        sim = FLSimConfig(**FAST, **ASYNC)
+        acfg = AggregationConfig(strategy=strategy, cr=0.05)
+        full = run_fl(sim, acfg, engine="async")
+        ckpt = str(tmp_path / strategy)
+        run_fl(sim, acfg, engine="async", checkpoint_dir=ckpt,
+               checkpoint_every=2, stop_after=3)
+        res = run_fl(sim, acfg, engine="async", checkpoint_dir=ckpt,
+                     checkpoint_every=2)
+        np.testing.assert_array_equal(_accs(res), _accs(full))
+        np.testing.assert_array_equal(_times(res), _times(full))
+        np.testing.assert_array_equal(
+            np.asarray(res.async_loop.flat), np.asarray(full.async_loop.flat))
+        assert res.async_loop.proc.counter == full.async_loop.proc.counter
+        assert ([(b["client"], b["uid"]) for b in res.async_loop.buffer]
+                == [(b["client"], b["uid"]) for b in full.async_loop.buffer])
+        if full.final_residuals is not None:
+            np.testing.assert_array_equal(res.final_residuals,
+                                          full.final_residuals)

@@ -59,3 +59,57 @@ class TestCheckpoint:
         assert step == 1
         np.testing.assert_array_equal(np.asarray(r1["a"]),
                                       np.asarray(_tree(0)["a"]))
+
+
+class TestRestoreLatestValid:
+    """Graceful degradation on corruption: fall back to the newest INTACT
+    step with a warning instead of crashing the resumed run."""
+
+    def _corrupt(self, tmp_path, step):
+        path = os.path.join(str(tmp_path), f"step_{step}.msgpack")
+        raw = bytearray(open(path, "rb").read())
+        raw[len(raw) // 2] ^= 0xFF
+        open(path, "wb").write(bytes(raw))
+
+    def test_falls_back_past_corrupt_latest(self, tmp_path):
+        ckpt.save(str(tmp_path), 1, _tree(0), keep=5)
+        ckpt.save(str(tmp_path), 2, _tree(1), keep=5)
+        self._corrupt(tmp_path, 2)
+        with pytest.warns(RuntimeWarning, match="corrupt checkpoint"):
+            tree, step, _ = ckpt.restore_latest_valid(str(tmp_path), _tree())
+        assert step == 1
+        np.testing.assert_array_equal(np.asarray(tree["a"]),
+                                      np.asarray(_tree(0)["a"]))
+
+    def test_truncated_latest(self, tmp_path):
+        ckpt.save(str(tmp_path), 1, _tree(0), keep=5)
+        path = ckpt.save(str(tmp_path), 2, _tree(1), keep=5)
+        raw = open(path, "rb").read()
+        open(path, "wb").write(raw[: len(raw) // 3])   # torn write
+        with pytest.warns(RuntimeWarning):
+            _, step, _ = ckpt.restore_latest_valid(str(tmp_path), _tree())
+        assert step == 1
+
+    def test_intact_latest_needs_no_warning(self, tmp_path):
+        import warnings
+        ckpt.save(str(tmp_path), 1, _tree(0), keep=5)
+        ckpt.save(str(tmp_path), 2, _tree(1), keep=5)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            _, step, _ = ckpt.restore_latest_valid(str(tmp_path), _tree())
+        assert step == 2
+
+    def test_all_corrupt_raises(self, tmp_path):
+        ckpt.save(str(tmp_path), 1, _tree(0), keep=5)
+        self._corrupt(tmp_path, 1)
+        with pytest.warns(RuntimeWarning):
+            with pytest.raises(FileNotFoundError, match="integrity"):
+                ckpt.restore_latest_valid(str(tmp_path), _tree())
+
+    def test_config_mismatch_still_raises(self, tmp_path):
+        # a VALID checkpoint that disagrees with the requested structure is
+        # a config error, never a fall-back case
+        ckpt.save(str(tmp_path), 1, _tree(0))
+        bad = dict(_tree(0), a=jnp.zeros((4, 4)))
+        with pytest.raises(ValueError):
+            ckpt.restore_latest_valid(str(tmp_path), bad, strict=False)

@@ -27,6 +27,41 @@ class TestStraggler:
         assert out[1] == 0
         assert out.sum() == pytest.approx(c.sum())
 
+    def test_deadline_cuts_below_target(self):
+        """The deadline excludes stragglers even when fewer than n_target
+        have arrived — only the fastest finisher is guaranteed a slot."""
+        times = [1.0, 1.2, 40.0, 50.0, 60.0]   # median 40 -> deadline 60
+        pol = StragglerPolicy(deadline_factor=0.1)  # deadline 4.0
+        chosen, dur = arrivals(times, 4, pol)
+        assert chosen.tolist() == [True, True, False, False, False]
+        assert dur == 1.2
+        # degenerate: everyone past the deadline -> the fastest still runs
+        chosen, dur = arrivals([10.0, 20.0], 2,
+                               StragglerPolicy(deadline_factor=0.01))
+        assert chosen.tolist() == [True, False]
+        assert dur == 10.0
+
+    def test_deadline_host_traced_parity(self):
+        """`arrivals` (host) and `arrival_mask_traced` (in-jit) agree on
+        the arrived set under the same deadline policy, infs included."""
+        import jax.numpy as jnp
+        from repro.ft.straggler import arrival_mask_traced
+        rng = np.random.default_rng(11)
+        pol = StragglerPolicy(deadline_factor=1.2)
+        for _ in range(20):
+            t = rng.exponential(2.0, size=8)
+            t[rng.random(8) < 0.2] = np.inf
+            if not np.isfinite(t).any():
+                continue
+            n_target = int(rng.integers(1, 9))
+            finite = np.isfinite(t)
+            host, _ = arrivals(t[finite], n_target, pol)
+            host_full = np.zeros(8, bool)
+            host_full[finite] = host
+            traced = np.asarray(arrival_mask_traced(
+                jnp.asarray(t, jnp.float32), n_target, pol))
+            np.testing.assert_array_equal(traced, host_full)
+
 
 class TestFailures:
     def test_injector_deterministic(self):

@@ -313,9 +313,11 @@ class TestHostPlanning:
         b = inj.survivors_at(2, ids)
         assert np.array_equal(a, b)
         # per-id keying: a client's fate depends only on (seed, round, id),
-        # never on who else was sampled alongside it (cohort revive aside)
-        raw = np.array([np.random.default_rng(
-            (inj.seed, 2, int(c))).random() >= inj.p_fail for c in ids])
+        # never on who else was sampled alongside it (cohort revive aside).
+        # Golden re-pinned once to the vectorized counter_uniform stream
+        # (splitmix64 v1) when the per-id default_rng loop was replaced.
+        from repro.ft.failures import counter_uniform
+        raw = counter_uniform(inj.seed, 2, ids) >= inj.p_fail
         assert raw.any()     # draw produced survivors, so no revive fired
         assert np.array_equal(a, raw)
         perm = np.array([17, 3])

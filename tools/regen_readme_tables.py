@@ -47,6 +47,11 @@ ENGINE_ROWS = [
     ("`population`", "1 jit dispatch per round, state streamed per cohort",
      "flat `[n]` + out-of-core sparse client store, O(C·n + P·(n−k_min))",
      "`fed/population.py`"),
+    ("`async` (`fl_train --engine async`)",
+     "event-driven; 1 jit dispatch per buffer flush",
+     "flat `[n]` + `[P + 1, n]` per-client EF store + K-slot buffer, "
+     "staleness-discounted OPWA, crash-safe (DESIGN.md §11)",
+     "`fed/async_engine.py`"),
     ("mesh `round` (`fl_train --engine round`)", "1 jit dispatch per round",
      "real sharded arch, params pytree", "`fed/mesh_round.py`"),
     ("mesh `scan` (`fl_train` default)", "1 `lax.scan` per checkpoint chunk",
