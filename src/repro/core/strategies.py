@@ -512,6 +512,16 @@ register(Strategy(
     kernel_codec="int8"))
 
 register(Strategy(
+    name="bitmask_topk",
+    description="int8-quantized Top-K survivors shipped under a 1-bit "
+                "coordinate bitmask instead of idx32 — cheaper than packed "
+                "indices above ~3.1% density, and the built-in that "
+                "exercises the BITMASK_* mask-bits pricing end-to-end",
+    carry="ef", selector="topk", value_codec=int8_symmetric_codec,
+    weighting="data", wire=BITMASK_INT8, megakernel=True,
+    kernel_codec="int8"))
+
+register(Strategy(
     name="int4",
     description="int4-quantized Top-K survivors (EF absorbs the error); "
                 "idx32+int4 packed wire at 9/16 of the reference pair",

@@ -210,6 +210,14 @@ def make_masked_local_trainer(loss_fn: Callable, lr: float):
     forward pass per step via value_and_grad — the legacy trainer's
     post-update loss recompute is a third of its step FLOPs and feeds
     nothing downstream; the deltas are unaffected).
+
+    Wave-composition contract (the async engine's batched dispatch leans on
+    this): each vmapped lane reads only its own (params, batches, mask)
+    slice, so a client's delta is invariant to the WIDTH of the vmap it
+    rides in and to which other clients share the batch — training clients
+    one-at-a-time, in eager waves of one, or in padded pow2 wave buckets
+    produces bit-identical deltas. Anything added here must preserve that
+    (no cross-lane reductions, no width-dependent arithmetic).
     """
     vg_fn = jax.value_and_grad(lambda p, b: loss_fn(p, b)[0])
 

@@ -18,6 +18,14 @@ dispatch granularities:
     ``lax.scan`` with the params/residual pytrees threaded through the
     donated carry (the ``launch.fl_train`` default).
 
+``fl_train --engine async`` deliberately does NOT route through this body:
+its wave trainer (``async_engine.make_wave_train_step``) vmaps the same
+``engine.make_masked_local_trainer`` over per-member params gathered from
+the version ring — a [Wb, n] second params axis this round-synchronous body
+has no slot for — and compresses at the buffer merge, not per upload. The
+two legs share the trainer's wave-composition contract (see its docstring),
+which is what keeps the mesh sync legs and the async leg comparable.
+
 Per-leaf selection (vs the host-loop simulator's whole-model flatten) keeps
 every tensor sharded; per-leaf retained counts come from the shared
 ``k_for_ratio_traced`` rounding rule, so the host scheduler and the traced

@@ -139,6 +139,29 @@ class FLSimConfig:
     async_backoff_factor: float = 2.0
     #: hard wall-clock deadline per upload (seconds since dispatch)
     async_upload_timeout_s: float = float("inf")
+    #: batched dispatch: record dispatches as pending and train them in
+    #: padded vmapped WAVES at flush / ring-eviction / checkpoint time (one
+    #: jit dispatch per wave shape bucket instead of one per upload) —
+    #: bit-exact with per-client dispatch (False), which remains as the
+    #: sequential baseline the dispatch benchmark compares against
+    async_batch_dispatch: bool = True
+    #: retained-parameter-version ring depth V for wave training. Must be
+    #: >= the observable staleness bound (``async_engine.min_version_ring``:
+    #: 1 when M <= K, else 2); deeper rings batch better under heavy
+    #: staleness (shallow rings force-retire pending waves early, never
+    #: affecting correctness)
+    async_version_ring: int = 8
+    #: opt back into the dense [P+1, n] EF residual reference store (the
+    #: default is the sparse out-of-core ``population.ClientStateStore`` in
+    #: the strategy's declared ``residual_layout``)
+    async_dense_store: bool = False
+    #: sparse-store chunking: clients per chunk
+    async_store_chunk: int = 256
+    #: sparse-store LRU bound: max resident chunks (0 = unbounded; bounding
+    #: requires ``async_store_spill``)
+    async_store_resident: int = 0
+    #: directory evicted sparse-store chunks spill into ("" = none)
+    async_store_spill: str = ""
     # ------------------------------------------- link population shape ----
     #: client uplink bandwidth distribution (normal, floored at 0.05 Mbps —
     #: ``cost_model.sample_link_arrays``). Defaults match the historical

@@ -103,6 +103,11 @@ class ArrivalProcess:
         """Pending events in heap order (deterministic: keyed by (t, uid))."""
         return [ev for _, _, ev in sorted(self._heap)]
 
+    def busy_clients(self) -> set:
+        """Clients with an upload in flight — the engine's busy-set rebuild
+        on restore (a client is busy from dispatch until abort or flush)."""
+        return {ev.client for _, _, ev in self._heap}
+
     # ---------------------------------------------------------- checkpointing
     _STATE_COLS = ("uid", "client", "version", "t_dispatch", "t_resolve",
                    "arrived", "attempts", "progress", "timed_out")

@@ -90,6 +90,9 @@ class FLTrainConfig:
     async_stall_s: float = float("inf")   # partial-flush deadline
     async_p_fail: float = 0.0    # per-attempt mid-transfer failure prob
     async_timeout_s: float = float("inf")
+    async_version_ring: int = 8  # retained-version ring depth V (waves)
+    async_batch_dispatch: bool = True   # False = per-dispatch baseline
+    async_store_chunk: int = 4096       # sparse-store clients per chunk
     population: int = 0          # > 0: streaming-cohort mode over P clients
     cohort: int = 0              # cohort slots C (population mode; 0 ->
                                  # --clients is reused as the cohort size)
@@ -251,9 +254,6 @@ def run(cfg: FLTrainConfig) -> dict:
     straggler = (StragglerPolicy(over_selection=cfg.over_selection)
                  if cfg.over_selection > 0 else None)
     if cfg.engine == "async":
-        if cfg.population > 0:
-            raise ValueError("engine='async' runs in dense-state mode only "
-                             "(streaming-population async is future work)")
         return _run_async(cfg, model, model_cfg, params, links, strat,
                           acfg, fracs_all, n_flat, v_bytes)
     plan = _build_plan(cfg, rng, fracs_all, links, v_bytes, acfg,
@@ -394,42 +394,82 @@ def _run_async(cfg: FLTrainConfig, model, model_cfg, params, links, strat,
     the sync driver's round-indexed streams). ``cfg.rounds`` counts buffer
     flushes; crash-safe state (params, per-client EF store, buffer,
     in-flight uploads) persists through ``cfg.checkpoint_dir`` and a rerun
-    resumes bit-exactly. Sharded (TP/FSDP) async is future work — this path
-    trains single-device like the simulation engines."""
+    resumes bit-exactly.
+
+    Dispatches batch into padded vmapped waves (one train-program jit call
+    per wave shape bucket — docs/DESIGN.md §12) unless
+    ``cfg.async_batch_dispatch`` is off. With ``cfg.population > 0`` the
+    loop runs at streaming-population scale: O(C) cohort selection over P
+    registered clients (``LinkArrays`` columns), per-client EF residuals in
+    a sparse out-of-core ``population.ClientStateStore`` gathered only for
+    the flushed buffer members, snapshotted chunk-wise through the
+    checkpointer. Sharded (TP/FSDP) async is future work — this path trains
+    single-device like the simulation engines."""
     from repro.core import aggregation as agg_mod
-    from repro.core.compression import flatten_tree
+    from repro.core.compression import flatten_tree, k_for_ratio
     from repro.fed import async_engine as async_mod
+    from repro.fed import population as pop_mod
 
     flat0, unravel = flatten_tree(params)
     times = cost_model.TimeAccumulator()
-    c_slots = cfg.c_slots
-    k_buf = cfg.async_buffer_k or c_slots
-    m_conc = cfg.async_concurrency or max(1, min(2 * k_buf,
-                                                 cfg.clients - k_buf))
+    n_reg = cfg.n_registered
+    k_buf = cfg.async_buffer_k or cfg.c_slots
+    m_conc = cfg.async_concurrency or max(1, min(2 * k_buf, n_reg - k_buf))
     fracs_norm = np.asarray(fracs_all, np.float64)
     fracs_norm = fracs_norm / fracs_norm.sum()
-    crs_all, coeffs_all, _info = agg_mod.round_schedule(
-        acfg, cfg.clients, fracs_norm, links, v_bytes)
-    ks_all = agg_mod.ks_for_schedule(n_flat, crs_all, acfg)
+    if strat.weighting == "bcrs" and isinstance(links,
+                                                cost_model.LinkArrays):
+        # population mode: the vectorized whole-population schedule (no P
+        # Python ClientLink objects — the _build_plan convention)
+        crs_b, coeffs_b, _ = bcrs_mod.make_schedule_batch(
+            links.bandwidth_bps[None], links.latency_s[None],
+            fracs_norm[None], v_bytes, cfg.cr, cfg.alpha)
+        crs_all, coeffs_all = crs_b[0], coeffs_b[0]
+    else:
+        crs_all, coeffs_all, _info = agg_mod.round_schedule(
+            acfg, n_reg, fracs_norm, links, v_bytes)
+    crs_arr = np.asarray(crs_all, np.float64)
+    if strat.compresses and np.all(crs_arr == crs_arr.flat[0]):
+        # uniform schedule (data weighting): one k, not P k_for_ratio calls
+        ks_all = np.full((n_reg,),
+                         k_for_ratio(n_flat, float(crs_arr.flat[0])),
+                         np.int32)
+    else:
+        ks_all = agg_mod.ks_for_schedule(n_flat, crs_all, acfg)
     cr_eff_all = np.broadcast_to(np.asarray(
-        strat.wire.cr_eff(np.asarray(crs_all, np.float64), n_flat),
-        np.float64), (cfg.clients,))
+        strat.wire.cr_eff(crs_arr, n_flat), np.float64), (n_reg,))
 
-    train = async_mod.make_async_train_step(
+    ef = strat.needs_residuals
+    store = None
+    if ef and cfg.population > 0:
+        layout = strat.residual_layout
+        width = (pop_mod.residual_width(n_flat, int(ks_all.min()))
+                 if layout == "topk_complement" else 0)
+        store = pop_mod.ClientStateStore(
+            n_reg, n_flat, layout=layout, width=width,
+            chunk_clients=min(cfg.async_store_chunk, n_reg))
+        merge = async_mod.make_async_merge_step(
+            acfg, eta=cfg.eta,
+            residual_layout=("topk_complement"
+                             if layout == "topk_complement" else "rows"),
+            width=width)
+    else:
+        merge = async_mod.make_async_merge_step(acfg, eta=cfg.eta)
+
+    wave_train = async_mod.make_wave_train_step(
         model.loss_fn, params, lr=cfg.lr,
-        make_batches=lambda x: x["batches"], strategy=cfg.strategy)
-    merge = async_mod.make_async_merge_step(acfg, eta=cfg.eta)
-    smask = jnp.ones((1, cfg.local_steps), bool)
+        make_batches=lambda x: {"tokens": x["tokens"],
+                                "labels": x["labels"]},
+        strategy=cfg.strategy)
+    smask_row = np.ones((cfg.local_steps,), bool)
 
-    def train_update(client: int, uid: int, flat) -> np.ndarray:
+    def batch_plan(client: int, uid: int) -> Dict[str, np.ndarray]:
         r = np.random.default_rng((cfg.seed, async_mod.BATCH_TAG, uid))
         toks = synthetic_lm_tokens(
             cfg.local_steps * cfg.batch, cfg.seq + 1, model_cfg.vocab_size,
-            r).reshape(1, cfg.local_steps, cfg.batch, cfg.seq + 1)
-        upd = train(flat, {"batches": {"tokens": jnp.asarray(toks[..., :-1]),
-                                       "labels": jnp.asarray(toks[..., 1:])},
-                           "step_mask": smask})
-        return np.asarray(upd[0])
+            r).reshape(cfg.local_steps, cfg.batch, cfg.seq + 1)
+        return {"tokens": toks[..., :-1], "labels": toks[..., 1:],
+                "step_mask": smask_row}
 
     def on_flush(flush_idx: int, flat, rt: cost_model.RoundTime) -> None:
         times.add(rt)
@@ -448,21 +488,26 @@ def _run_async(cfg: FLTrainConfig, model, model_cfg, params, links, strat,
     ckpt_every = (cfg.checkpoint_every
                   or (DEFAULT_CHECKPOINT_EVERY if cfg.checkpoint_dir else 0))
     loop = async_mod.BufferedAsyncLoop(
-        n_clients=cfg.clients, n_params=n_flat, buffer_k=k_buf,
+        n_clients=n_reg, n_params=n_flat, buffer_k=k_buf,
         concurrency=m_conc, target_flushes=cfg.rounds, seed=cfg.seed,
         alpha=cfg.async_alpha, stall_s=cfg.async_stall_s,
         p_fail=cfg.async_p_fail,
         retry=cost_model.RetryPolicy(timeout_s=cfg.async_timeout_s),
         links=links, v_bytes=v_bytes, cr_eff_all=cr_eff_all, ks_all=ks_all,
         coeff_table=(coeffs_all if strat.weighting == "bcrs" else None),
-        fracs_all=fracs_all, merge=merge, train_update=train_update,
-        on_flush=on_flush, checkpoint_dir=cfg.checkpoint_dir or None,
+        fracs_all=fracs_all, merge=merge, wave_train=wave_train,
+        batch_plan=batch_plan, on_flush=on_flush,
+        batch_dispatch=cfg.async_batch_dispatch,
+        version_ring=cfg.async_version_ring, residual_store=store,
+        checkpoint_dir=cfg.checkpoint_dir or None,
         checkpoint_every=ckpt_every, extra_state=extra_state,
         load_extra=load_extra)
     flat = loop.run(jnp.asarray(flat0))
     if cfg.verbose:
         print(f"[fl] done; accumulated virtual wall {times.actual:.1f}s "
-              f"over {loop.flushes} flushes")
+              f"over {loop.flushes} flushes "
+              f"({loop.train_calls} train dispatches / "
+              f"{loop.train_rows} client updates)")
     return {"params": unravel(flat), "residuals": loop.store, "losses": [],
             "executed_rounds": list(range(loop.flushes)),
             "wall_per_round": [], "chunk_rounds": [], "times": times,
@@ -642,6 +687,12 @@ def main():
                     help="per-attempt mid-transfer upload failure prob")
     ap.add_argument("--async-timeout", type=float, default=float("inf"),
                     help="per-upload hard deadline in seconds")
+    ap.add_argument("--async-version-ring", type=int, default=8,
+                    help="retained-parameter-version ring depth V for "
+                         "batched wave dispatch")
+    ap.add_argument("--async-sequential-dispatch", action="store_true",
+                    help="disable batched wave dispatch (per-upload jit "
+                         "baseline)")
     ap.add_argument("--population", type=int, default=0,
                     help="registered client count P for streaming-cohort "
                          "mode (0 = dense-state mode over --clients)")
@@ -664,6 +715,8 @@ def main():
         async_concurrency=args.async_concurrency,
         async_alpha=args.async_alpha, async_stall_s=args.async_stall,
         async_p_fail=args.async_p_fail, async_timeout_s=args.async_timeout,
+        async_version_ring=args.async_version_ring,
+        async_batch_dispatch=not args.async_sequential_dispatch,
         seed=args.seed))
 
 

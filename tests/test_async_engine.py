@@ -9,20 +9,36 @@
   * the degenerate sync-arrivals configuration reproduces the scan
     engine's trajectory exactly (pop_scan's for per-client-EF strategies,
     residual matrix included);
-  * the buffer merge compiles exactly ONCE per run;
+  * the buffer merge compiles exactly ONCE per run, the wave trainer once
+    per wave SHAPE BUCKET (a bounded pow2 set);
+  * batched wave dispatch is bit-exact with eager per-upload dispatch
+    while issuing strictly fewer jit calls;
   * every carry="ef" strategy survives p_fail > 0 end to end;
+  * the sparse out-of-core residual store reproduces the dense [P + 1, n]
+    reference bit-exactly at P = 4096 under failures + partial flushes,
+    and its train/merge programs never materialize a P-sized array;
   * a crash-restarted run (checkpoint -> stop -> resume) is bit-identical
-    to an uninterrupted one: params, residuals, times, accuracies.
+    to an uninterrupted one — params, residuals, times, accuracies —
+    including with the sparse store spilled to disk;
+  * the async_* config knobs are validated BEFORE any loop state exists.
 """
 import numpy as np
 import pytest
 
+import jax
+import jax.numpy as jnp
+
 from repro.core import cost_model
 from repro.core.aggregation import AggregationConfig
 from repro.core.bcrs import ClientLink, comm_time, staleness_discount
+from repro.core.compression import flatten_tree, k_for_ratio
 from repro.fed import async_engine
-from repro.fed.async_engine import flush_weights
-from repro.fed.simulation import FLSimConfig, run_fl
+from repro.fed import population as pop_mod
+from repro.fed.async_engine import (BufferedAsyncLoop, flush_weights,
+                                    make_async_merge_step,
+                                    make_wave_train_step, min_version_ring,
+                                    wave_bucket)
+from repro.fed.simulation import FLSimConfig, mlp_init, mlp_loss, run_fl
 from repro.ft.arrivals import ArrivalProcess, failure_fracs
 
 FAST = dict(rounds=6, n_train=1600, n_test=500, eval_every=2, seed=3)
@@ -215,7 +231,9 @@ class TestAsyncEngine:
                  for k, v in async_engine.TRACE_COUNTS.items()
                  if v != before.get(k, 0)}
         assert delta.get(("async_merge", strategy)) == 1
-        assert delta.get(("async_train", strategy)) == 1
+        # the wave trainer compiles once per wave SHAPE BUCKET, never more
+        assert delta.get(("async_train", strategy)) \
+            == len(res.async_loop.wave_buckets_used)
         assert len(res.executed_rounds) == sim.rounds
         assert res.final_accuracy > 0.2
         assert res.final_residuals is not None
@@ -256,6 +274,198 @@ class TestAsyncEngine:
                    engine="scan", checkpoint_dir="/tmp/x")
 
 
+# ------------------------------------------------------- batched dispatch
+class TestBatchedDispatch:
+    def test_wave_bucket_is_next_pow2(self):
+        assert [wave_bucket(w) for w in (1, 2, 3, 5, 8, 9, 16)] \
+            == [1, 2, 4, 8, 8, 16, 16]
+
+    def test_min_version_ring_bound(self):
+        # M <= K: every in-flight upload is current-version (depth 1);
+        # M > K: one flush can land mid-pipeline (pigeonhole -> depth 2)
+        assert min_version_ring(4, 8) == 1
+        assert min_version_ring(8, 8) == 1
+        assert min_version_ring(9, 8) == 2
+        assert min_version_ring(64, 8) == 2
+
+    @pytest.mark.parametrize("strategy", ["bcrs_opwa", "eftopk", "qtopk"])
+    def test_batched_bit_exact_with_sequential(self, strategy):
+        """Wave-batched dispatch is pure scheduling: params, residuals,
+        accuracies and flush times all match the eager per-upload baseline
+        bit for bit, with strictly fewer jit dispatches."""
+        acfg = AggregationConfig(strategy=strategy, cr=0.05)
+        b = run_fl(FLSimConfig(**FAST, **ASYNC), acfg, engine="async")
+        s = run_fl(FLSimConfig(**FAST, **ASYNC, async_batch_dispatch=False),
+                   acfg, engine="async")
+        np.testing.assert_array_equal(_accs(b), _accs(s))
+        np.testing.assert_array_equal(_times(b), _times(s))
+        np.testing.assert_array_equal(np.asarray(b.async_loop.flat),
+                                      np.asarray(s.async_loop.flat))
+        if s.final_residuals is not None:
+            np.testing.assert_array_equal(b.final_residuals,
+                                          s.final_residuals)
+        lb, ls = b.async_loop, s.async_loop
+        assert lb.train_calls < ls.train_calls
+        # eager mode trains each dispatch as a wave of one
+        assert ls.train_calls == ls.train_rows
+        assert ls.wave_buckets_used == {1}
+        assert all(w == wave_bucket(w) for w in lb.wave_buckets_used)
+
+    def test_version_ring_below_bound_rejected_at_config_time(self):
+        sim = FLSimConfig(**FAST, async_buffer_k=4, async_concurrency=6,
+                          async_version_ring=1)
+        with pytest.raises(ValueError, match="staleness bound"):
+            run_fl(sim, AggregationConfig(strategy="fedavg"),
+                   engine="async")
+
+    def test_store_resident_requires_spill_dir(self):
+        sim = FLSimConfig(**FAST, async_store_resident=2)
+        with pytest.raises(ValueError, match="spill"):
+            run_fl(sim, AggregationConfig(strategy="eftopk", cr=0.05),
+                   engine="async")
+
+
+# -------------------------------------------- sparse population-scale store
+def _drive_loop(p, k_buf, m_conc, flushes, *, sparse, stall_s,
+                spill=None, chunk=256, resident=None):
+    """Drive ``BufferedAsyncLoop`` directly (run_fl's dataset partition is
+    O(P) host setup — irrelevant to the loop under test) with a tiny MLP;
+    returns (loop, flush RoundTimes, buffer occupancy at each flush)."""
+    acfg = AggregationConfig(strategy="eftopk", cr=0.1)
+    pop = pop_mod.make_population(p, seed=11)
+    params = mlp_init(jax.random.PRNGKey(11), 16, 5, hidden=16)
+    flat0, _ = flatten_tree(params)
+    n = int(flat0.shape[0])
+    data_rng = np.random.default_rng(4)
+    x_all = jnp.asarray(data_rng.normal(size=(256, 16)).astype(np.float32))
+    y_all = jnp.asarray(data_rng.integers(0, 5, 256).astype(np.int32))
+    k = k_for_ratio(n, acfg.cr)
+    width = pop_mod.residual_width(n, k)
+    if sparse:
+        store = pop_mod.ClientStateStore(
+            p, n, layout="topk_complement", width=width,
+            chunk_clients=chunk, max_resident_chunks=resident,
+            spill_dir=spill)
+        merge = make_async_merge_step(
+            acfg, residual_layout="topk_complement", width=width)
+    else:
+        store, merge = None, make_async_merge_step(acfg)
+    wave_train = make_wave_train_step(
+        mlp_loss, params, lr=0.1,
+        make_batches=lambda x: {"x": x_all[x["sample_idx"]],
+                                "y": y_all[x["sample_idx"]]},
+        strategy="eftopk")
+
+    def batch_plan(client, uid):
+        r = np.random.default_rng((11, async_engine.BATCH_TAG, uid))
+        return {"sample_idx": r.integers(256, size=(2, 4)).astype(np.int32),
+                "step_mask": np.ones((2,), bool)}
+
+    rts = []
+    loop = BufferedAsyncLoop(
+        n_clients=p, n_params=n, buffer_k=k_buf, concurrency=m_conc,
+        # p_fail=0.5 with a 0.3 s deadline: clean first attempts land
+        # (latency 0.05-0.2 + a ~ms transfer) but a single failure pushes
+        # the retry past the deadline mid-backoff, so failed uploads abort
+        # while still PENDING — lazy mode never trains them (the
+        # aborted_untrained assertion below)
+        target_flushes=flushes, seed=11, alpha=0.5, stall_s=stall_s,
+        p_fail=0.5,
+        retry=cost_model.RetryPolicy(max_attempts=2, timeout_s=0.3),
+        links=pop.links, v_bytes=4.0 * n,
+        cr_eff_all=np.full(p, acfg.cr), ks_all=np.full(p, k, np.int32),
+        coeff_table=None, fracs_all=pop.weights, merge=merge,
+        wave_train=wave_train, batch_plan=batch_plan, residual_store=store,
+        on_flush=lambda i, f, rt: rts.append((rt.actual, rt.max, rt.min)))
+    flush_sizes = []
+    inner_flush = loop._flush
+
+    def spy_flush(t):
+        flush_sizes.append(len(loop.buffer))
+        inner_flush(t)
+
+    loop._flush = spy_flush
+    loop.run(jnp.array(flat0))
+    return loop, np.array(rts), flush_sizes
+
+
+class TestSparseStore:
+    def test_matches_dense_reference_p4096(self):
+        """P=4096 clients over a C=16 buffer with upload failures AND
+        stall-forced partial flushes: the sparse out-of-core store's run is
+        bit-identical to the dense [P + 1, n] reference — params, the full
+        residual matrix, and every flush's RoundTime."""
+        P, K = 4096, 16
+        dl, drts, dsizes = _drive_loop(P, K, 32, 8, sparse=False,
+                                       stall_s=0.02)
+        sl, srts, ssizes = _drive_loop(P, K, 32, 8, sparse=True,
+                                       stall_s=0.02, chunk=64)
+        assert dsizes == ssizes
+        np.testing.assert_array_equal(drts, srts)
+        np.testing.assert_array_equal(np.asarray(dl.flat),
+                                      np.asarray(sl.flat))
+        np.testing.assert_array_equal(sl.store.dump_dense(), dl.store[:P])
+        # the failure regime was actually exercised
+        assert min(dsizes) < K            # >=1 partial (stall) flush
+        assert dl.aborted_untrained > 0   # lazy mode skipped aborted waves
+
+
+class TestAsyncMemoryGate:
+    def _all_avals(self, jaxpr, out):
+        for eqn in jaxpr.eqns:
+            for v in list(eqn.invars) + list(eqn.outvars):
+                aval = getattr(v, "aval", None)
+                if aval is not None and hasattr(aval, "shape"):
+                    out.append(aval)
+            for param in eqn.params.values():
+                inner = getattr(param, "jaxpr", param)
+                if hasattr(inner, "eqns"):
+                    self._all_avals(inner, out)
+        return out
+
+    def test_wave_and_merge_programs_have_no_population_sized_aval(self):
+        """The async memory gate: the compiled wave-train and buffer-merge
+        programs are sized by the wave bucket / buffer K and the version
+        ring — for a nominal P = 10^6 population, NOTHING in either jaxpr
+        is within two orders of magnitude of a [P]-sized buffer."""
+        huge_p = 1_000_000
+        k_buf, ring_depth, bs, s = 8, 8, 4, 2
+        acfg = AggregationConfig(strategy="eftopk", cr=0.1)
+        params = mlp_init(jax.random.PRNGKey(0), 16, 5, hidden=16)
+        flat0, _ = flatten_tree(params)
+        n = int(flat0.shape[0])
+        k = k_for_ratio(n, acfg.cr)
+        width = pop_mod.residual_width(n, k)
+        x_all = jnp.zeros((256, 16), jnp.float32)
+        y_all = jnp.zeros((256,), jnp.int32)
+        wave_train = make_wave_train_step(
+            mlp_loss, params, lr=0.1,
+            make_batches=lambda x: {"x": x_all[x["sample_idx"]],
+                                    "y": y_all[x["sample_idx"]]},
+            strategy="eftopk")
+        merge = make_async_merge_step(
+            acfg, residual_layout="topk_complement", width=width)
+        ring = jnp.zeros((ring_depth, n), jnp.float32)
+        xw = {"sample_idx": jnp.zeros((k_buf, s, bs), jnp.int32),
+              "step_mask": jnp.ones((k_buf, s), bool),
+              "ver_idx": jnp.zeros((k_buf,), jnp.int32)}
+        xm = {"updates": jnp.zeros((k_buf, n), jnp.float32),
+              "weights": jnp.zeros((k_buf,), jnp.float32),
+              "ks": jnp.full((k_buf,), k, jnp.int32),
+              "active": jnp.ones((k_buf,), bool)}
+        res = (jnp.zeros((k_buf, width), jnp.int32),
+               jnp.zeros((k_buf, width), jnp.float32))
+        for closed in (jax.make_jaxpr(wave_train._fn)(ring, xw),
+                       jax.make_jaxpr(merge._fn)(
+                           jnp.zeros((n,), jnp.float32), res, xm)):
+            avals = self._all_avals(closed.jaxpr, [])
+            assert avals
+            biggest = max(int(np.prod(a.shape)) for a in avals)
+            assert biggest < huge_p // 100, (
+                f"async program allocates {biggest} elements")
+            assert all(huge_p not in a.shape for a in avals)
+
+
 # --------------------------------------------------------- crash restart
 class TestCrashRestart:
     @pytest.mark.parametrize("strategy", ["bcrs_opwa", "eftopk"])
@@ -281,3 +491,27 @@ class TestCrashRestart:
         if full.final_residuals is not None:
             np.testing.assert_array_equal(res.final_residuals,
                                           full.final_residuals)
+
+    def test_restart_bit_exact_with_sparse_store_spilled(self, tmp_path):
+        """Crash-restart with the sparse residual store under a 2-chunk
+        residency bound spilling to disk: the resumed run restores the
+        store from the checkpoint's chunk snapshots and finishes
+        bit-identical to the uninterrupted run, while the bounded LRU
+        actually evicted through the spill directory."""
+        sim = FLSimConfig(**FAST, **ASYNC, async_store_chunk=2,
+                          async_store_resident=2,
+                          async_store_spill=str(tmp_path / "spill"))
+        acfg = AggregationConfig(strategy="eftopk", cr=0.05)
+        full = run_fl(sim, acfg, engine="async")
+        assert full.async_loop.store.chunk_spills > 0
+        ckpt = str(tmp_path / "ckpt")
+        run_fl(sim, acfg, engine="async", checkpoint_dir=ckpt,
+               checkpoint_every=2, stop_after=3)
+        res = run_fl(sim, acfg, engine="async", checkpoint_dir=ckpt,
+                     checkpoint_every=2)
+        np.testing.assert_array_equal(_accs(res), _accs(full))
+        np.testing.assert_array_equal(_times(res), _times(full))
+        np.testing.assert_array_equal(np.asarray(res.async_loop.flat),
+                                      np.asarray(full.async_loop.flat))
+        np.testing.assert_array_equal(res.final_residuals,
+                                      full.final_residuals)

@@ -852,3 +852,44 @@ class TestInt4Strategy:
                 eff = wf.cr_eff(k / n, n)
                 np.testing.assert_allclose(8.0 * n * float(eff),
                                            wf.bytes_on_wire(n, k), rtol=1e-9)
+
+
+class TestBitmaskTopkStrategy:
+    """The bitmask-wire built-in: qtopk's exact math (topk + int8 codec +
+    EF + data weighting) shipped under a 1-bit coordinate bitmask instead
+    of packed idx32 — the strategy that exercises the BITMASK_* mask-bits
+    pricing end to end."""
+
+    def test_registered_capabilities(self):
+        s = strategies.get("bitmask_topk")
+        assert s.carry == "ef" and s.selector == "topk"
+        assert s.value_codec is strategies.int8_symmetric_codec
+        assert s.weighting == "data"
+        assert s.wire is strategies.BITMASK_INT8
+        assert s.megakernel and s.kernel_codec == "int8"
+        assert s.residual_layout == "dense"
+
+    def test_wire_pricing_beats_packed_indices_above_break_even(self):
+        # mask bits amortize over n: above k/n = 1/32 the bitmask wire is
+        # strictly cheaper than packed idx32 + int8; below it, dearer
+        s = strategies.get("bitmask_topk")
+        n = 10 ** 4
+        eff = float(s.wire.cr_eff(0.05, n))
+        # n/8 + k + 4 bytes over the 8k-byte reference pair
+        k = int(0.05 * n)
+        np.testing.assert_allclose(
+            eff, (n / 8.0 + k + 4.0) / (8.0 * n), rtol=1e-12)
+        assert eff < float(strategies.PACKED_INT8.cr_eff(0.05, n))
+        assert float(s.wire.cr_eff(0.01, n)) \
+            > float(strategies.PACKED_INT8.cr_eff(0.01, n))
+
+    def test_same_trajectory_as_qtopk_cheaper_comm(self):
+        """Wire format is accounting only: the bitmask_topk trajectory is
+        bit-identical to qtopk's (same selector, codec, EF carry), while
+        its comm time is strictly lower at GOLDEN_CR = 10% density — the
+        regime where the 1-bit mask beats 4-byte indices."""
+        bm = _run("bitmask_topk", "fused", **FAST_SIM)
+        q = _run("qtopk", "fused", **FAST_SIM)
+        assert _snapshot(bm)["accuracies"] == _snapshot(q)["accuracies"]
+        np.testing.assert_array_equal(bm.final_residuals, q.final_residuals)
+        assert bm.times.actual < q.times.actual

@@ -48,9 +48,11 @@ ENGINE_ROWS = [
      "flat `[n]` + out-of-core sparse client store, O(C·n + P·(n−k_min))",
      "`fed/population.py`"),
     ("`async` (`fl_train --engine async`)",
-     "event-driven; 1 jit dispatch per buffer flush",
-     "flat `[n]` + `[P + 1, n]` per-client EF store + K-slot buffer, "
-     "staleness-discounted OPWA, crash-safe (DESIGN.md §11)",
+     "event-driven; wave-batched train dispatch (≤ log2(max(K, M)) + 1 "
+     "compiles) + 1 jit dispatch per buffer flush",
+     "flat `[n]` + version ring `[V, n]` + sparse out-of-core client "
+     "store + K-slot buffer, staleness-discounted OPWA, crash-safe "
+     "(DESIGN.md §11–§12)",
      "`fed/async_engine.py`"),
     ("mesh `round` (`fl_train --engine round`)", "1 jit dispatch per round",
      "real sharded arch, params pytree", "`fed/mesh_round.py`"),
